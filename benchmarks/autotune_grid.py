@@ -1,0 +1,70 @@
+"""Paper §4 "Auto Tuning": does the cost-model pick match grid search?
+
+For each dataset: build the spline once, then MEASURE actual lookup time for
+every feasible (radix r) and (cht r, delta) candidate under the space budget,
+and compare the auto-tuner's pick against the measured optimum. Reports the
+pick, the measured best, and the regret (% slower than measured-best).
+Also reproduces the qualitative claim: radix table everywhere except `face`
+(where the outlier problem forces CHT)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_spline, build_cht, build_radix_table, tune
+from repro.core.plex import PLEX, BuildStats
+
+from .common import datasets, queries, timed_lookup
+
+EPS = 32
+
+
+def _mk_plex(spline, layer, keys, tuning) -> PLEX:
+    return PLEX(spline=spline, layer=layer, tuning=tuning, keys=keys,
+                eps=spline.eps, stats=BuildStats(0, 0, 0, 0))
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("autotune,dataset,picked,picked_ns,best_cfg,best_ns,"
+                "regret_pct")
+    for dname, keys in datasets().items():
+        q = queries(keys, 50_000)
+        spline = build_spline(keys, EPS)
+        tuning = tune(spline, keys)
+        budget = spline.size_bytes
+
+        # measured grid (the "expensive grid search" the paper replaces)
+        results = {}
+        for r in range(1, 19):
+            if 4 * ((1 << r) + 1) > budget:
+                break
+            layer = build_radix_table(spline.keys, r)
+            px = _mk_plex(spline, layer, keys, tuning)
+            results[f"radix r={r}"] = timed_lookup(px, q, repeats=2)
+        for r in (2, 4, 6, 8, 10):
+            for d in (4, 16, 64, 256):
+                if tuning.cht_bytes[r, d] > budget:
+                    continue
+                layer = build_cht(spline.keys, r, d)
+                px = _mk_plex(spline, layer, keys, tuning)
+                results[f"cht r={r} d={d}"] = timed_lookup(px, q, repeats=2)
+
+        picked = (f"radix r={tuning.r}" if tuning.kind == "radix"
+                  else f"cht r={tuning.r} d={tuning.delta}")
+        picked_ns = results.get(picked)
+        if picked_ns is None:   # tuner picked a config outside the bench grid
+            layer = (build_radix_table(spline.keys, tuning.r)
+                     if tuning.kind == "radix"
+                     else build_cht(spline.keys, tuning.r, tuning.delta))
+            picked_ns = timed_lookup(_mk_plex(spline, layer, keys, tuning), q,
+                                     repeats=2)
+        best_cfg = min(results, key=results.get)
+        best_ns = results[best_cfg]
+        regret = (picked_ns - best_ns) / best_ns * 100
+        rows.append(f"autotune,{dname},{picked},{picked_ns:.1f},{best_cfg},"
+                    f"{best_ns:.1f},{regret:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,74 @@
+"""Shared benchmark plumbing: index builders, timing, CSV emit.
+
+Paper setup (§4): 200M-key SOSD datasets on a 48-vCPU machine. This
+container is 1 vCPU / offline, so the synthetics default to BENCH_N=400k
+(override with env BENCH_N); per-key costs are reported from batched
+vectorised lookups (methodology note in EXPERIMENTS.md — trends, not
+absolute ns, are the reproduction target)."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import build_plex
+from repro.core.baselines.bsearch import build_binary_search
+from repro.core.baselines.btree import build_btree
+from repro.core.baselines.cht_index import (DuplicateKeysError,
+                                            build_cht_index)
+from repro.core.baselines.pgm import build_pgm
+from repro.core.baselines.radixspline import build_radixspline
+from repro.core.baselines.rmi import build_rmi
+from repro.data import DATASETS, generate
+
+BENCH_N = int(os.environ.get("BENCH_N", 400_000))
+N_QUERIES = int(os.environ.get("BENCH_QUERIES", 200_000))
+
+
+def datasets(n: int = None):
+    n = n or BENCH_N
+    return {name: generate(name, n, seed=0) for name in DATASETS}
+
+
+def queries(keys: np.ndarray, n: int = None, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return keys[rng.integers(0, keys.size, n or N_QUERIES)]
+
+
+def timed_build(fn, *args, **kw):
+    t0 = time.perf_counter()
+    idx = fn(*args, **kw)
+    return idx, time.perf_counter() - t0
+
+
+def timed_lookup(idx, q: np.ndarray, repeats: int = 3) -> float:
+    """Best-of-repeats ns/key for a batched lookup."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        idx.lookup(q)
+        best = min(best, time.perf_counter() - t0)
+    return best / q.size * 1e9
+
+
+def verify(idx, keys: np.ndarray, q: np.ndarray) -> None:
+    got = idx.lookup(q[:20_000])
+    want = np.searchsorted(keys, q[:20_000], side="left")
+    assert np.array_equal(got, want), f"{idx.name} lookup wrong"
+
+
+# (name, builder, kwargs-grid) — the Figs. 2/3 sweep
+def index_grid():
+    return [
+        ("PLEX", build_plex, [{"eps": e} for e in (8, 32, 128, 512)]),
+        ("RS", build_radixspline,
+         [{"eps": e, "r": 18} for e in (8, 32, 128, 512)]),
+        ("PGM", build_pgm, [{"eps": e} for e in (8, 32, 128, 512)]),
+        ("RMI", build_rmi,
+         [{"n_models": m} for m in (1 << 10, 1 << 14, 1 << 18)]),
+        ("CHT", build_cht_index,
+         [{"r": r, "delta": d} for r, d in ((4, 32), (8, 64), (10, 256))]),
+        ("BTree", build_btree, [{"fanout": f} for f in (8, 16, 64)]),
+        ("BinarySearch", build_binary_search, [{}]),
+    ]

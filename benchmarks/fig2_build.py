@@ -1,0 +1,32 @@
+"""Paper Fig. 2: build time vs index size, per dataset, per index.
+
+PLEX's build time INCLUDES auto-tuning (the paper's headline fairness point:
+RS/CHT/RMI were grid-searched offline). Emits CSV:
+dataset,index,config,build_s,size_bytes."""
+from __future__ import annotations
+
+from .common import (DuplicateKeysError, datasets, index_grid, queries,
+                     timed_build, verify)
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("fig2,dataset,index,config,build_s,size_bytes")
+    for dname, keys in datasets().items():
+        q = queries(keys)
+        for iname, builder, grid in index_grid():
+            for kw in grid:
+                tag = ";".join(f"{k}={v}" for k, v in kw.items()) or "-"
+                try:
+                    idx, dt = timed_build(builder, keys, **kw)
+                except DuplicateKeysError:
+                    rows.append(f"fig2,{dname},{iname},{tag},DUPLICATE_KEYS,")
+                    continue
+                verify(idx, keys, q)
+                rows.append(f"fig2,{dname},{iname},{tag},{dt:.4f},"
+                            f"{idx.size_bytes}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

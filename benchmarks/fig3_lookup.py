@@ -1,0 +1,33 @@
+"""Paper Fig. 3: lookup time vs index size, per dataset, per index.
+
+Emits CSV: dataset,index,config,ns_per_lookup,size_bytes. The paper's two
+qualitative claims checked downstream: (i) PLEX matches RS everywhere and
+beats it on `face` (outliers); (ii) learned indexes beat BTree/binary search
+at comparable sizes."""
+from __future__ import annotations
+
+from .common import (DuplicateKeysError, datasets, index_grid, queries,
+                     timed_build, timed_lookup, verify)
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("fig3,dataset,index,config,ns_per_lookup,size_bytes")
+    for dname, keys in datasets().items():
+        q = queries(keys)
+        for iname, builder, grid in index_grid():
+            for kw in grid:
+                tag = ";".join(f"{k}={v}" for k, v in kw.items()) or "-"
+                try:
+                    idx, _ = timed_build(builder, keys, **kw)
+                except DuplicateKeysError:
+                    continue
+                verify(idx, keys, q)
+                ns = timed_lookup(idx, q)
+                rows.append(f"fig3,{dname},{iname},{tag},{ns:.1f},"
+                            f"{idx.size_bytes}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,39 @@
+"""Batched device-lookup path benchmark (numpy core vs jit/Pallas pipeline).
+
+Pallas runs in interpret mode on CPU (correctness harness, not TPU timing),
+so this reports (a) the numpy reference throughput and (b) the pure-jnp
+jitted pipeline throughput, plus the kernel's window/config so the roofline
+discussion in EXPERIMENTS.md §Perf can reason about VMEM tiles."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import build_plex
+from repro.kernels import DevicePlex
+
+from .common import datasets, queries
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("kernel,dataset,layer,mode,window,numpy_ns,device_ns")
+    for dname, keys in datasets(100_000).items():
+        q = queries(keys, 32_768)
+        px = build_plex(keys, eps=16)
+        dp = DevicePlex.from_plex(px)
+        dp.lookup(q[:dp.block])           # compile
+        t0 = time.perf_counter()
+        px.lookup(q)
+        np_ns = (time.perf_counter() - t0) / q.size * 1e9
+        t0 = time.perf_counter()
+        dp.lookup(q)
+        dev_ns = (time.perf_counter() - t0) / q.size * 1e9
+        rows.append(f"kernel,{dname},{px.tuning.kind},{dp.static['mode']},"
+                    f"{dp.window},{np_ns:.0f},{dev_ns:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,132 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell:
+    compute    = HLO_FLOPs_per_device / 197e12        [s]
+    memory     = HLO_bytes_per_device / 819e9         [s]
+    collective = collective_bytes_per_device / 50e9   [s]
+HLO quantities are the while-loop-corrected extrapolations (see
+launch/dryrun.py probes). MODEL_FLOPS is the analytic napkin model; the
+MODEL/HLO ratio flags remat/redundancy waste. The roofline fraction is
+    useful = MODEL_FLOPS / (chips * peak)  over  max(term)
+i.e. how close the cell is to the best achievable given its dominant
+bottleneck. v5e constants: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def terms(rec: dict) -> dict | None:
+    h = rec.get("hlo_extrapolated") or {}
+    if "flops" not in h:
+        return None
+    chips = rec["chips"]
+    compute = h["flops"] / PEAK_FLOPS
+    memory = h["bytes"] / HBM_BW
+    coll = h["coll_bytes"] / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda t: t[1])
+    model = rec["analytic"]["model_flops"]
+    useful = model / (chips * PEAK_FLOPS)
+
+    # fused-attention projection of the memory term (lower band; the HLO
+    # bytes-accessed number is the unfused upper band — see launch/analytic)
+    try:
+        from repro.configs import SHAPES, get_config
+        from repro.launch.analytic import analytic_memory_bytes
+        import dataclasses
+        cfg = get_config(rec["arch"])
+        if rec.get("overrides"):
+            cfg = dataclasses.replace(cfg, **rec["overrides"])
+        mem_fused = analytic_memory_bytes(cfg, SHAPES[rec["shape"]]) / HBM_BW
+    except Exception:
+        mem_fused = memory
+    bound_fused = max(compute, mem_fused, coll)
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "memory_fused_s": mem_fused,
+        "dominant": dom[0], "bound_s": dom[1],
+        "model_flops": model,
+        "hlo_flops_global": h["flops"] * chips,
+        "model_hlo_ratio": model / max(h["flops"] * chips, 1.0),
+        "roofline_fraction": useful / max(dom[1], 1e-12),
+        "roofline_fraction_fused": useful / max(bound_fused, 1e-12),
+        "hbm_per_device": rec.get("memory", {}).get(
+            "argument_size_in_bytes", 0) + rec.get("memory", {}).get(
+            "temp_size_in_bytes", 0),
+    }
+
+
+def table(mesh: str = "16x16") -> list[str]:
+    rows = ["roofline,arch,shape,compute_ms,memory_ms,mem_fused_ms,"
+            "collective_ms,dominant,model/hlo,roofline_frac,frac_fused,"
+            "hbm_GB"]
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        if t is None:
+            continue
+        rows.append(
+            f"roofline,{t['arch']},{t['shape']},{t['compute_s']*1e3:.2f},"
+            f"{t['memory_s']*1e3:.2f},{t['memory_fused_s']*1e3:.2f},"
+            f"{t['collective_s']*1e3:.2f},"
+            f"{t['dominant']},{t['model_hlo_ratio']:.2f},"
+            f"{t['roofline_fraction']:.3f},"
+            f"{t['roofline_fraction_fused']:.3f},"
+            f"{t['hbm_per_device']/1e9:.1f}")
+    return rows
+
+
+def perf_table() -> list[str]:
+    """Baseline-vs-optimized rows for every tagged §Perf artifact."""
+    rows = ["perf,arch,shape,variant,compute_ms,memory_ms,collective_ms,"
+            "bound_ms,gain_x"]
+    base_bound: dict[tuple[str, str], float] = {}
+    tagged = []
+    for p in sorted(RESULTS.glob("*__16x16*.json")):
+        rec = json.loads(p.read_text())
+        t = terms(rec)
+        if t is None:
+            continue
+        parts = p.stem.split("__")
+        tag = parts[3] if len(parts) > 3 else "baseline"
+        key = (t["arch"], t["shape"])
+        if tag == "baseline":
+            base_bound[key] = t["bound_s"]
+        tagged.append((key, tag, t))
+    for key, tag, t in tagged:
+        if tag == "baseline" and not any(k == key and tg != "baseline"
+                                         for k, tg, _ in tagged):
+            continue  # only show cells that have perf variants
+        gain = base_bound.get(key, t["bound_s"]) / max(t["bound_s"], 1e-12)
+        rows.append(
+            f"perf,{key[0]},{key[1]},{tag},{t['compute_s']*1e3:.1f},"
+            f"{t['memory_s']*1e3:.1f},{t['collective_s']*1e3:.1f},"
+            f"{t['bound_s']*1e3:.1f},{gain:.1f}")
+    return rows
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.extend(table())
+    rows.extend(perf_table())
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

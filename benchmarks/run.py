@@ -1,0 +1,51 @@
+"""Benchmark driver — one section per paper table/figure + roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections: fig2 (build/size), fig3 (lookup/size), autotune (vs grid search),
+kernel (device lookup path), roofline (from dry-run artifacts, if present).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small N for CI (BENCH_N=60000)")
+    ap.add_argument("--only", default=None,
+                    help="comma-list: fig2,fig3,autotune,kernel,roofline")
+    args = ap.parse_args()
+    if args.quick and "BENCH_N" not in os.environ:
+        os.environ["BENCH_N"] = "60000"
+        os.environ["BENCH_QUERIES"] = "40000"
+
+    # imports AFTER env so common.py picks BENCH_N up
+    from . import autotune_grid, fig2_build, fig3_lookup, kernel_bench
+    from . import roofline
+
+    sections = {
+        "fig2": fig2_build.run,
+        "fig3": fig3_lookup.run,
+        "autotune": autotune_grid.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+    rows: list[str] = []
+    for name in wanted:
+        t0 = time.perf_counter()
+        try:
+            sections[name](rows)
+        except Exception as e:  # keep the harness honest but resilient
+            rows.append(f"{name},ERROR,{e!r}")
+        rows.append(f"# {name} took {time.perf_counter()-t0:.1f}s")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

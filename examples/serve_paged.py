@@ -1,0 +1,54 @@
+"""End-to-end serving driver: batched requests through a small model with
+PLEX-paged KV swap-out (the paper's technique serving the page table).
+
+    PYTHONPATH=src python examples/serve_paged.py [--arch phi3-mini-3.8b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import Model
+from repro.serving import ServeEngine
+from repro.serving.engine import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_size=4, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, rng.integers(4, 12))
+        eng.submit(Request(seq_id=i, prompt=prompt.astype(np.int32),
+                           max_new=args.max_new))
+
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(f.tokens) for f in finished)
+    print(f"arch={cfg.name}: served {len(finished)} requests, {toks} tokens "
+          f"in {dt:.1f}s ({toks/dt:.1f} tok/s, CPU smoke scale)")
+    for f in finished[:4]:
+        print(f"  seq {f.seq_id}: {f.tokens[:8].tolist()}... "
+              f"({f.swapped_pages} KV pages swapped via PLEX page table)")
+    pt = eng.kv_store.table
+    print(f"page table: {len(pt)} mappings, {pt.lookups} lookups, "
+          f"{pt.rebuilds} PLEX rebuilds")
+    # pull one sequence back from the paged store (resume path)
+    kv = eng.kv_store.fetch(finished[0].seq_id, 4)
+    print(f"swap-in OK: restored KV block shape {kv.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .manager import CheckpointManager
+from .store import load_pytree, read_tensor, save_pytree
+
+__all__ = ["CheckpointManager", "load_pytree", "read_tensor", "save_pytree"]

@@ -1,0 +1,19 @@
+"""PLEX core: the paper's contribution as a composable library.
+
+Build path (host/numpy — the paper's single-pass CPU build):
+    build_spline -> tune -> build_radix_table | build_cht -> PLEX
+Lookup paths:
+    PLEX.lookup            vectorised numpy (CPU reference)
+    repro.kernels.ops      batched jit/Pallas lookup (TPU target)
+"""
+from .autotune import TuneResult, cht_cost_model, radix_cost_model, tune
+from .cht import CHT, adjacent_lcp, build_cht
+from .plex import PLEX, bounded_lower_bound, build_plex
+from .radix_table import RadixTable, build_radix_table
+from .spline import Spline, build_spline
+
+__all__ = [
+    "CHT", "PLEX", "RadixTable", "Spline", "TuneResult", "adjacent_lcp",
+    "bounded_lower_bound", "build_cht", "build_plex", "build_radix_table",
+    "build_spline", "cht_cost_model", "radix_cost_model", "tune",
+]

@@ -1,0 +1,17 @@
+"""Baseline index structures the paper evaluates PLEX against (Figs. 2-3).
+
+All share the lookup contract of `repro.core.plex.PLEX.lookup`: vectorised
+first-occurrence index of present keys (lower bound for absent ones).
+ART is omitted — pointer-chasing adaptive nodes are CPU-specific and do not
+transfer to the batched/TPU setting (DESIGN.md §9); BTree covers the classical
+comparison point.
+"""
+from .bsearch import BinarySearch
+from .btree import BTree
+from .cht_index import CHTIndex
+from .pgm import PGMIndex
+from .radixspline import RadixSpline
+from .rmi import RMI
+
+__all__ = ["BinarySearch", "BTree", "CHTIndex", "PGMIndex", "RadixSpline",
+           "RMI"]

@@ -1,0 +1,55 @@
+"""PGM-index baseline (Ferragina & Vinciguerra 2020): recursive eps-PLA.
+
+Each level is an eps-bounded piecewise-linear approximation of the level
+below; we reuse the greedy corridor builder (an eps-PLA with at most 2x the
+optimal segment count — PGM uses the optimal O(N) algorithm, same asymptotics,
+noted in DESIGN.md §9). Lookup descends level by level, each step a bounded
+binary search within +-eps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..spline import Spline, build_spline
+
+
+@dataclasses.dataclass
+class PGMIndex:
+    keys: np.ndarray
+    levels: list[Spline]      # bottom (largest, over the data) first
+    eps: int
+    name: str = "PGM"
+
+    @property
+    def size_bytes(self) -> int:
+        return int(sum(lv.size_bytes for lv in self.levels))
+
+    def lookup(self, q: np.ndarray) -> np.ndarray:
+        from ..plex import bounded_lower_bound
+        q = np.asarray(q, dtype=np.uint64)
+        # search window within the current level's key array; the top level is
+        # small so its window is the whole level
+        lo = np.zeros(q.size, dtype=np.int64)
+        hi = np.full(q.size, self.levels[-1].keys.size - 1, dtype=np.int64)
+        for i in range(len(self.levels) - 1, -1, -1):
+            lv = self.levels[i]
+            seg = bounded_lower_bound(lv.keys, q, lo, hi, side="right")
+            seg = np.clip(seg, 0, lv.keys.size - 2)
+            pred = lv.predict_in_segment(q, seg)
+            below = self.keys.size if i == 0 else self.levels[i - 1].keys.size
+            lo = np.clip(np.floor(pred).astype(np.int64) - self.eps,
+                         0, below - 1)
+            hi = np.clip(np.ceil(pred).astype(np.int64) + self.eps,
+                         0, below - 1)
+        return bounded_lower_bound(self.keys, q, lo, hi, side="left")
+
+
+def build_pgm(keys: np.ndarray, eps: int, *, top_threshold: int = 64
+              ) -> PGMIndex:
+    keys = np.asarray(keys, dtype=np.uint64)
+    levels = [build_spline(keys, eps)]
+    while levels[-1].keys.size > top_threshold:
+        levels.append(build_spline(levels[-1].keys, eps))
+    return PGMIndex(keys=keys, levels=levels, eps=eps)

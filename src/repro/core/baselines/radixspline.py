@@ -1,0 +1,51 @@
+"""RadixSpline baseline (Kipf et al. 2020): eps-spline + fixed-r radix table.
+
+Identical to PLEX except the radix layer is a flat table whose ``r`` is a
+*hyperparameter* (no auto-tuning, no CHT option) — this is what exposes RS to
+the outlier problem the paper demonstrates on ``face``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..radix_table import RadixTable, build_radix_table
+from ..spline import Spline, build_spline
+
+
+@dataclasses.dataclass
+class RadixSpline:
+    spline: Spline
+    table: RadixTable
+    keys: np.ndarray
+    eps: int
+    name: str = "RadixSpline"
+
+    @property
+    def size_bytes(self) -> int:
+        return self.spline.size_bytes + self.table.size_bytes
+
+    def predict(self, q: np.ndarray) -> np.ndarray:
+        from ..plex import bounded_lower_bound
+        q = np.asarray(q, dtype=np.uint64)
+        lo, hi = self.table.lookup(q)
+        seg = bounded_lower_bound(self.spline.keys, q, lo, hi, side="right")
+        seg = np.clip(seg, 0, self.spline.keys.size - 2)
+        return self.spline.predict_in_segment(q, seg)
+
+    def lookup(self, q: np.ndarray) -> np.ndarray:
+        from ..plex import bounded_lower_bound
+        q = np.asarray(q, dtype=np.uint64)
+        pred = self.predict(q)
+        n = self.keys.size
+        lo = np.clip(np.floor(pred).astype(np.int64) - self.eps, 0, n - 1)
+        hi = np.clip(np.ceil(pred).astype(np.int64) + self.eps, 0, n - 1)
+        return bounded_lower_bound(self.keys, q, lo, hi, side="left")
+
+
+def build_radixspline(keys: np.ndarray, eps: int, r: int = 18) -> RadixSpline:
+    keys = np.ascontiguousarray(keys, dtype=np.uint64)
+    spline = build_spline(keys, eps)
+    table = build_radix_table(spline.keys, r)
+    return RadixSpline(spline=spline, table=table, keys=keys, eps=eps)

@@ -1,0 +1,3 @@
+from .sosd import DATASETS, generate
+
+__all__ = ["DATASETS", "generate"]

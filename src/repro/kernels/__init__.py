@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for batched PLEX lookups + pure-jnp oracles.
+
+Layout per kernel contract: ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd assembly), ``ref.py`` (pure-jnp oracle). Validated in
+interpret mode on CPU; BlockSpecs keep lanes at multiples of 128 for the
+TPU target.
+"""
+from .flash_attention import flash_attention_fwd
+from .ops import DevicePlex
+
+__all__ = ["DevicePlex", "flash_attention_fwd"]

@@ -1,0 +1,142 @@
+"""jit'd device lookup path assembling the Pallas kernels (TPU target).
+
+``DevicePlex.from_plex`` converts a host-built ``repro.core.PLEX`` into device
+planes + static search parameters; ``DevicePlex.lookup`` runs the batched
+pipeline:
+
+    segment kernel (radix | CHT)  ->  XLA HBM window gather  ->
+    bounded_search kernel
+
+Float32 interpolation on TPU cannot reproduce the host's float64 predictions
+bit-for-bit, so the eps window is widened by a statically-computed ``slack``
+(2 + max segment position span * 2^-22, covering worst-case f32 rounding of
+``y0 + t*(y1-y0)``); correctness remains *by construction*, not by accident.
+The data planes are padded with the maximum key so window reads never wrap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cht import CHT
+from ..core.plex import PLEX
+from ..core.radix_table import RadixTable
+from .bounded_search import bounded_search
+from .pairs import extract_bits, split_u64
+from .plex_segment_lookup import (DEFAULT_BLOCK, cht_segment_lookup,
+                                  radix_segment_lookup)
+
+COUNT_MODE_MAX = 512    # windows at most this wide use compare-and-count
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class DevicePlex:
+    # spline planes
+    skhi: Any
+    sklo: Any
+    spos: Any                 # float32 ranks
+    # data planes (padded to >= window with the max key)
+    dhi: Any
+    dlo: Any
+    n_data: int               # padded length
+    n_real: int
+    # layer
+    kind: str                 # "radix" | "cht"
+    layer_arrays: dict[str, Any]
+    static: dict[str, Any]
+    eps_eff: int
+    window: int
+    block: int
+    interpret: bool
+    _fn: Any = None
+
+    @classmethod
+    def from_plex(cls, px: PLEX, *, block: int = DEFAULT_BLOCK,
+                  interpret: bool = True) -> "DevicePlex":
+        skh, skl = split_u64(px.spline.keys)
+        spos = px.spline.positions.astype(np.float32)
+        if px.spline.positions.size and px.spline.positions[-1] >= (1 << 24):
+            raise ValueError("float32 rank plane supports < 2^24 positions; "
+                             "shard the index first (serving does)")
+        spans = np.diff(px.spline.positions)
+        max_span = int(spans.max()) if spans.size else 1
+        slack = int(np.ceil(max_span * 2.0 ** -22)) + 2
+        eps_eff = px.eps + slack
+        window = _round_up(2 * eps_eff + 2, 128)
+
+        n_real = px.keys.size
+        n_pad = max(_round_up(n_real, 128), window)
+        pad = np.full(n_pad - n_real, np.iinfo(np.uint64).max, dtype=np.uint64)
+        dh, dl = split_u64(np.concatenate([px.keys, pad]))
+
+        if isinstance(px.layer, RadixTable):
+            kind = "radix"
+            mk = int(px.layer.min_key)
+            layer_arrays = {"table": jnp.asarray(px.layer.table)}
+            max_win = px.layer.max_window
+            static = dict(shift=int(px.layer.shift), r=int(px.layer.r),
+                          min_hi=(mk >> 32) & 0xFFFFFFFF,
+                          min_lo=mk & 0xFFFFFFFF,
+                          max_win=int(max_win),
+                          mode="count" if max_win <= COUNT_MODE_MAX
+                          else "bisect")
+        else:
+            assert isinstance(px.layer, CHT)
+            kind = "cht"
+            layer_arrays = {"cells": jnp.asarray(px.layer.cells)}
+            static = dict(r=int(px.layer.r),
+                          levels=int(px.layer.max_depth) + 1,
+                          delta=int(px.layer.delta),
+                          mode="count" if px.layer.delta + 1 <= COUNT_MODE_MAX
+                          else "bisect")
+        dp = cls(skhi=jnp.asarray(skh), sklo=jnp.asarray(skl),
+                 spos=jnp.asarray(spos), dhi=jnp.asarray(dh),
+                 dlo=jnp.asarray(dl), n_data=n_pad, n_real=n_real, kind=kind,
+                 layer_arrays=layer_arrays, static=static, eps_eff=eps_eff,
+                 window=window, block=block, interpret=interpret)
+        dp._fn = jax.jit(functools.partial(_lookup_pipeline, dp))
+        return dp
+
+    def lookup(self, q: np.ndarray) -> np.ndarray:
+        """Batched device lookup; same contract as PLEX.lookup."""
+        q = np.asarray(q, dtype=np.uint64)
+        b = q.size
+        bp = _round_up(max(b, self.block), self.block)
+        qp = np.concatenate([q, np.repeat(q[-1:], bp - b)]) if bp > b else q
+        qh, ql = split_u64(qp)
+        out = np.asarray(self._fn(jnp.asarray(qh), jnp.asarray(ql)))
+        return np.minimum(out[:b].astype(np.int64), self.n_real)
+
+
+def _lookup_pipeline(dp: DevicePlex, qhi, qlo):
+    s = dp.static
+    if dp.kind == "radix":
+        base = radix_segment_lookup(
+            qhi, qlo, dp.layer_arrays["table"], dp.skhi, dp.sklo, dp.spos,
+            shift=s["shift"], r=s["r"], min_hi=s["min_hi"],
+            min_lo=s["min_lo"], max_win=s["max_win"], eps_eff=dp.eps_eff,
+            n_data=dp.n_data, window=dp.window, mode=s["mode"],
+            block=dp.block, interpret=dp.interpret)
+    else:
+        bins = jnp.stack([extract_bits(qhi, qlo, lvl * s["r"], s["r"])
+                          for lvl in range(s["levels"])])
+        base = cht_segment_lookup(
+            qhi, qlo, bins, dp.layer_arrays["cells"], dp.skhi, dp.sklo,
+            dp.spos, r=s["r"], levels=s["levels"], delta=s["delta"],
+            eps_eff=dp.eps_eff, n_data=dp.n_data, window=dp.window,
+            mode=s["mode"], block=dp.block, interpret=dp.interpret)
+    offs = jnp.arange(dp.window, dtype=jnp.int32)
+    idx = base[:, None] + offs[None, :]
+    whi = jnp.take(dp.dhi, idx)
+    wlo = jnp.take(dp.dlo, idx)
+    return bounded_search(qhi, qlo, whi, wlo, base, block=dp.block,
+                          interpret=dp.interpret)

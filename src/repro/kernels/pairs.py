@@ -1,0 +1,77 @@
+"""uint64-as-(hi, lo)-uint32 pair arithmetic — the TPU key representation.
+
+TPUs have no native 64-bit integers, so device-side PLEX lookups carry keys as
+two uint32 planes (DESIGN.md §3). All helpers are branchless jnp and usable
+both inside Pallas kernel bodies and in the pure-jnp reference oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_u64(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side: uint64 array -> (hi, lo) uint32 planes."""
+    x = np.asarray(x, dtype=np.uint64)
+    return ((x >> np.uint64(32)).astype(np.uint32),
+            (x & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def join_u64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Host-side inverse of split_u64."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(
+        lo, np.uint64)
+
+
+def pair_le(ahi, alo, bhi, blo):
+    """(a <= b) for u64 pairs."""
+    return (ahi < bhi) | ((ahi == bhi) & (alo <= blo))
+
+
+def pair_lt(ahi, alo, bhi, blo):
+    return (ahi < bhi) | ((ahi == bhi) & (alo < blo))
+
+
+def pair_sub(ahi, alo, bhi, blo):
+    """a - b (mod 2^64) for u64 pairs; caller guarantees a >= b."""
+    borrow = (alo < blo).astype(jnp.uint32)
+    lo = alo - blo
+    hi = ahi - bhi - borrow
+    return hi, lo
+
+
+def pair_shr(hi, lo, s: int):
+    """(hi, lo) >> s for a *static* shift 0 <= s < 64."""
+    if s == 0:
+        return hi, lo
+    if s < 32:
+        new_lo = (lo >> s) | (hi << (32 - s))
+        return hi >> s, new_lo
+    return jnp.zeros_like(hi), hi >> (s - 32)
+
+
+def pair_to_f32(hi, lo):
+    """Approximate float32 value of a u64 pair (used for interpolation
+    deltas; the eps-window slack absorbs the rounding, ops.py computes it)."""
+    return hi.astype(jnp.float32) * jnp.float32(4294967296.0) + lo.astype(
+        jnp.float32)
+
+
+def pair_shl(hi, lo, s: int):
+    """(hi, lo) << s (mod 2^64) for a *static* shift 0 <= s < 64."""
+    if s == 0:
+        return hi, lo
+    if s < 32:
+        return (hi << s) | (lo >> (32 - s)), lo << s
+    return lo << (s - 32), jnp.zeros_like(lo)
+
+
+def extract_bits(hi, lo, offset: int, r: int):
+    """Bits [offset, offset+r) from the MSB of the 64-bit key, as int32.
+
+    Static offset/r (r <= 31). Identical geometry to core.cht._extract_bins:
+    ``(key << offset) >> (64 - r)``.
+    """
+    shi, slo = pair_shl(hi, lo, offset)
+    _, bits = pair_shr(shi, slo, 64 - r)
+    return (bits & jnp.uint32((1 << r) - 1)).astype(jnp.int32)

@@ -1,0 +1,207 @@
+"""Pallas kernel: PLEX segment lookup + spline interpolation (TPU target).
+
+One fused kernel maps a block of queries to the *base* of their final
+eps-bounded data window:
+
+    radix layer (table gather | CHT descent)  ->  bounded spline-segment
+    search  ->  float32 interpolation  ->  window base = floor(pred) - eps_eff
+
+Layout: queries are blocked along the batch axis (grid dim 0); the spline
+planes / radix arrays are small by construction (the auto-tuner caps the radix
+layer at the spline size, and a tuned spline is O(N/eps) points) and are
+VMEM-resident as whole-array blocks. Keys travel as (hi, lo) uint32 planes
+(``pairs.py``) — TPUs have no u64.
+
+Two search modes for the spline window, selected statically by ops.py:
+  * "count": branchless masked compare-and-popcount over the window. One
+    vectorised sweep; optimal for the small windows tuned indexes produce
+    (this is the TPU-idiomatic replacement for binary search, DESIGN.md §3).
+  * "bisect": fixed-trip-count bounded binary search (log2(max_window) gather
+    rounds); used when a degenerate layer leaves a huge max window.
+
+The kernel is validated in interpret mode against ``ref.py`` and the numpy
+core; block shapes keep the lane dimension a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pairs import pair_le, pair_shr, pair_sub, pair_to_f32
+
+DEFAULT_BLOCK = 512
+
+
+def _predecessor_count(qhi, qlo, skhi, sklo, lo, hi):
+    """Masked popcount predecessor search: largest i in [lo, hi] with
+    sk[i] <= q (assumes sk[lo] <= q), window width static = max over batch."""
+    width = skhi.shape[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (qhi.shape[0], width), 1)
+    valid = offs <= (hi - lo)[:, None]
+    le = pair_le(skhi, sklo, qhi[:, None], qlo[:, None])
+    cnt = jnp.sum((le & valid).astype(jnp.int32), axis=1)
+    return lo + jnp.maximum(cnt - 1, 0)
+
+
+def _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline):
+    """Float32 spline interpolation at the found segment."""
+    seg = jnp.clip(seg, 0, n_spline - 2)
+    x0h = jnp.take(skhi, seg)
+    x0l = jnp.take(sklo, seg)
+    x1h = jnp.take(skhi, seg + 1)
+    x1l = jnp.take(sklo, seg + 1)
+    y0 = jnp.take(spos, seg)
+    y1 = jnp.take(spos, seg + 1)
+    dxh, dxl = pair_sub(x1h, x1l, x0h, x0l)
+    # clamp q to segment start (q >= x0 by construction of the search)
+    dqh, dql = pair_sub(qhi, qlo, x0h, x0l)
+    dx = jnp.maximum(pair_to_f32(dxh, dxl), jnp.float32(1.0))
+    dq = pair_to_f32(dqh, dql)
+    t = jnp.clip(dq / dx, 0.0, 1.0)
+    return y0 + t * (y1 - y0)
+
+
+def _radix_body(qhi_ref, qlo_ref, table_ref, skhi_ref, sklo_ref, spos_ref,
+                base_ref, *, shift, r, min_hi, min_lo, max_win, n_spline,
+                eps_eff, n_data, window, mode):
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    table = table_ref[...]
+    skhi = skhi_ref[...]
+    sklo = sklo_ref[...]
+    spos = spos_ref[...]
+
+    mh = jnp.uint32(min_hi)
+    ml = jnp.uint32(min_lo)
+    below = (qhi < mh) | ((qhi == mh) & (qlo < ml))
+    dh, dl = pair_sub(qhi, qlo, mh, ml)
+    dh = jnp.where(below, jnp.uint32(0), dh)
+    dl = jnp.where(below, jnp.uint32(0), dl)
+    _, pfx = pair_shr(dh, dl, shift)
+    p = jnp.clip(pfx.astype(jnp.int32), 0, (1 << r) - 1)
+    lo = jnp.maximum(jnp.take(table, p).astype(jnp.int32) - 1, 0)
+    hi = jnp.maximum(jnp.take(table, p + 1).astype(jnp.int32) - 1, 0)
+
+    if mode == "count":
+        offs = jax.lax.broadcasted_iota(jnp.int32, (qhi.shape[0], max_win), 1)
+        idx = jnp.minimum(lo[:, None] + offs, n_spline - 1)
+        wh = jnp.take(skhi, idx)
+        wl = jnp.take(sklo, idx)
+        seg = _predecessor_count(qhi, qlo, wh, wl, lo, hi)
+    else:  # bisect: fixed-trip bounded binary search
+        trips = max(int(max_win - 1).bit_length(), 0)
+        for _ in range(trips):
+            mid = (lo + hi + 1) >> 1
+            mh_, ml_ = (jnp.take(skhi, jnp.minimum(mid, n_spline - 1)),
+                        jnp.take(sklo, jnp.minimum(mid, n_spline - 1)))
+            go = pair_le(mh_, ml_, qhi, qlo)
+            lo = jnp.where(go, mid, lo)
+            hi = jnp.where(go, hi, mid - 1)
+        seg = lo
+
+    pred = _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline)
+    base = jnp.floor(pred).astype(jnp.int32) - eps_eff
+    base_ref[...] = jnp.clip(base, 0, n_data - window)
+
+
+def _cht_body(qhi_ref, qlo_ref, bins_ref, cells_ref, skhi_ref, sklo_ref,
+              spos_ref, base_ref, *, r, levels, delta, n_spline, eps_eff,
+              n_data, window, mode):
+    qhi = qhi_ref[...]
+    qlo = qlo_ref[...]
+    bins = bins_ref[...]            # [levels, block]
+    cells = cells_ref[...]
+    skhi = skhi_ref[...]
+    sklo = sklo_ref[...]
+    spos = spos_ref[...]
+
+    fanout = jnp.int32(1 << r)
+    node = jnp.zeros(qhi.shape, jnp.int32)
+    out = jnp.zeros(qhi.shape, jnp.int32)
+    done = jnp.zeros(qhi.shape, jnp.bool_)
+    for level in range(levels):            # static unroll: levels <= ~12
+        cell = jnp.take(cells, node * fanout + bins[level])
+        is_child = (cell >> 31) != 0
+        val = (cell & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        newly = jnp.logical_and(~done, ~is_child)
+        out = jnp.where(newly, val, out)
+        node = jnp.where(jnp.logical_and(~done, is_child), val, node)
+        done = jnp.logical_or(done, ~is_child)
+
+    lo = out
+    hi = jnp.minimum(out + delta, n_spline - 1)
+    if mode == "count":
+        width = delta + 1
+        offs = jax.lax.broadcasted_iota(jnp.int32, (qhi.shape[0], width), 1)
+        idx = jnp.minimum(lo[:, None] + offs, n_spline - 1)
+        wh = jnp.take(skhi, idx)
+        wl = jnp.take(sklo, idx)
+        seg = _predecessor_count(qhi, qlo, wh, wl, lo, hi)
+    else:
+        trips = max(int(delta).bit_length(), 0)
+        for _ in range(trips):
+            mid = (lo + hi + 1) >> 1
+            mh_, ml_ = (jnp.take(skhi, jnp.minimum(mid, n_spline - 1)),
+                        jnp.take(sklo, jnp.minimum(mid, n_spline - 1)))
+            go = pair_le(mh_, ml_, qhi, qlo)
+            lo = jnp.where(go, mid, lo)
+            hi = jnp.where(go, hi, mid - 1)
+        seg = lo
+
+    pred = _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline)
+    base = jnp.floor(pred).astype(jnp.int32) - eps_eff
+    base_ref[...] = jnp.clip(base, 0, n_data - window)
+
+
+def radix_segment_lookup(qhi, qlo, table, skhi, sklo, spos, *, shift, r,
+                         min_hi, min_lo, max_win, eps_eff, n_data, window,
+                         mode="count", block=DEFAULT_BLOCK, interpret=True):
+    """Window bases [B] for a batch of queries through a radix-table layer."""
+    b = qhi.shape[0]
+    assert b % block == 0, "ops.py pads the batch"
+    n_spline = skhi.shape[0]
+    body = functools.partial(
+        _radix_body, shift=shift, r=r, min_hi=min_hi, min_lo=min_lo,
+        max_win=max_win, n_spline=n_spline, eps_eff=eps_eff, n_data=n_data,
+        window=window, mode=mode)
+    grid = (b // block,)
+    qspec = pl.BlockSpec((block,), lambda i: (i,))
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[qspec, qspec, full(table.shape[0]), full(n_spline),
+                  full(n_spline), full(n_spline)],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(qhi, qlo, table, skhi, sklo, spos)
+
+
+def cht_segment_lookup(qhi, qlo, bins, cells, skhi, sklo, spos, *, r, levels,
+                       delta, eps_eff, n_data, window, mode="count",
+                       block=DEFAULT_BLOCK, interpret=True):
+    """Window bases [B] through a CHT layer. ``bins`` is int32 [levels, B]
+    (per-level radix digits, precomputed vectorised outside the kernel)."""
+    b = qhi.shape[0]
+    assert b % block == 0
+    n_spline = skhi.shape[0]
+    body = functools.partial(
+        _cht_body, r=r, levels=levels, delta=delta, n_spline=n_spline,
+        eps_eff=eps_eff, n_data=n_data, window=window, mode=mode)
+    grid = (b // block,)
+    qspec = pl.BlockSpec((block,), lambda i: (i,))
+    bspec = pl.BlockSpec((levels, block), lambda i: (0, i))
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[qspec, qspec, bspec, full(cells.shape[0]), full(n_spline),
+                  full(n_spline), full(n_spline)],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(qhi, qlo, bins, cells, skhi, sklo, spos)

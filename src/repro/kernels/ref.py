@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas_call, no u64).
+
+These recompute each kernel's contract with maximally-simple dense jnp:
+predecessor/lower-bound via full compare-and-count over the *whole* array
+(O(S) per query — fine at test sizes), so they share no windowing/searching
+logic with the kernels they check. End-to-end integer equality against the
+numpy core (`repro.core`) is asserted separately in tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .pairs import pair_le, pair_lt, pair_sub, pair_to_f32
+
+
+def segment_ref(qhi, qlo, skhi, sklo):
+    """Predecessor spline segment via dense count over all spline keys."""
+    le = pair_le(skhi[None, :], sklo[None, :], qhi[:, None], qlo[:, None])
+    cnt = jnp.sum(le.astype(jnp.int32), axis=1)
+    return jnp.clip(cnt - 1, 0, skhi.shape[0] - 2)
+
+
+def interp_ref(qhi, qlo, skhi, sklo, spos, seg):
+    x0h, x0l = jnp.take(skhi, seg), jnp.take(sklo, seg)
+    x1h, x1l = jnp.take(skhi, seg + 1), jnp.take(sklo, seg + 1)
+    y0, y1 = jnp.take(spos, seg), jnp.take(spos, seg + 1)
+    dxh, dxl = pair_sub(x1h, x1l, x0h, x0l)
+    dqh, dql = pair_sub(qhi, qlo, x0h, x0l)
+    dx = jnp.maximum(pair_to_f32(dxh, dxl), jnp.float32(1.0))
+    t = jnp.clip(pair_to_f32(dqh, dql) / dx, 0.0, 1.0)
+    return y0 + t * (y1 - y0)
+
+
+def window_base_ref(qhi, qlo, skhi, sklo, spos, *, eps_eff, n_data, window):
+    """Oracle for the fused segment-lookup kernels' output."""
+    seg = segment_ref(qhi, qlo, skhi, sklo)
+    pred = interp_ref(qhi, qlo, skhi, sklo, spos, seg)
+    base = jnp.floor(pred).astype(jnp.int32) - eps_eff
+    return jnp.clip(base, 0, n_data - window)
+
+
+def lower_bound_ref(qhi, qlo, khi, klo):
+    """Dense lower bound over the whole data plane (oracle for
+    bounded_search: kernel(base, windows) must equal this when the window
+    contains the answer)."""
+    lt = pair_lt(khi[None, :], klo[None, :], qhi[:, None], qlo[:, None])
+    return jnp.sum(lt.astype(jnp.int32), axis=1)

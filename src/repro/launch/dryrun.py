@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import (device count locks at
+# first backend init). This module is the ONLY place the flag is set.
+# (No `from __future__ import annotations` here for the same ordering reason.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the right step function (train_step / prefill /
+serve_step) with ShapeDtypeStruct inputs carrying production NamedShardings,
+compiles it, and records:
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms,
+  * the collective mix — parsed from the post-SPMD HLO text,
+as a JSON artifact under results/dryrun/ that benchmarks/roofline.py and
+EXPERIMENTS.md consume.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, shape_supported
+from ..configs.registry import ARCH_IDS
+from ..models.lm import Model
+from ..models.steps import (make_prefill_step, make_serve_step,
+                            make_train_step)
+from ..optim import adamw_init
+from ..parallel.sharding import (fsdp_rules, LOGICAL_RULES, logical_sharding,
+                                 set_mesh_rules, tree_shardings)
+from ..utils.flags import unrolled_scans
+from .analytic import analytic_flops
+from .mesh import make_production_mesh
+from .specs import batch_specs, decode_specs
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum per-device result bytes of every collective op in post-SPMD HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(?:\(([^)]*)\)|(\S+))\s+(" + "|".join(_COLLECTIVES)
+        + r")(?:-start|-done)?\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        op = m.group(3)
+        if f"{op}-done" in line:
+            continue  # counted at -start
+        shapes = m.group(1) or m.group(2)
+        nbytes = 0
+        for dt, dims in shape_pat.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _probe_cfg(cfg, groups: int):
+    """Reduced-depth variant: `groups` repeats of the scanned pattern (plus
+    any prefix layers), used by the unrolled HLO-cost probes."""
+    if cfg.block_pattern:
+        return dataclasses.replace(cfg,
+                                   n_layers=len(cfg.block_pattern) * groups)
+    return dataclasses.replace(cfg, n_layers=cfg.first_dense + groups)
+
+
+def _full_groups(cfg) -> float:
+    if cfg.block_pattern:
+        return cfg.n_layers / len(cfg.block_pattern)
+    return float(cfg.n_layers - cfg.first_dense)
+
+
+def _lower_cell(cfg, shape, mesh, rules, overrides):
+    """Lower the right step function with production shardings; returns
+    (lowered, extras) — shared by the real cell and the probes."""
+    model = Model(cfg)
+    with set_mesh_rules(mesh, overrides), mesh:
+        params, axes = model.init(abstract=True)
+        p_sh = tree_shardings(params, axes, mesh, rules)
+        p_specs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params, p_sh)
+        if shape.kind == "train":
+            opt_specs = jax.eval_shape(adamw_init, params)
+            opt_specs = opt_specs._replace(
+                step=jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P())),
+                m=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=sh), opt_specs.m, p_sh),
+                v=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=sh), opt_specs.v, p_sh))
+            b_specs = batch_specs(cfg, shape, mesh, rules, labels=True)
+            fn = jax.jit(make_train_step(model), donate_argnums=(0, 1))
+            return fn.lower(p_specs, opt_specs, b_specs)
+        if shape.kind == "prefill":
+            b_specs = batch_specs(cfg, shape, mesh, rules, labels=False)
+            fn = jax.jit(make_prefill_step(model))
+            return fn.lower(p_specs, b_specs)
+        cache, tokens, pos = decode_specs(cfg, shape, mesh, rules)
+        fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        return fn.lower(p_specs, cache, tokens, pos)
+
+
+def _cost_of(cfg, shape, mesh, rules, overrides) -> dict:
+    with unrolled_scans(True):
+        lowered = _lower_cell(cfg, shape, mesh, rules, overrides)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"]),
+            "coll": coll}
+
+
+def probe_hlo_costs(arch: str, shape_name: str, *, multi_pod: bool,
+                    overrides_cfg: dict | None = None) -> dict:
+    """Extrapolated per-device HLO costs: compile 1-group and 2-group
+    unrolled variants, derive per-group cost, extrapolate to full depth.
+    (XLA's cost analysis counts while bodies once; see utils/flags.py.)"""
+    cfg = get_config(arch)
+    if overrides_cfg:
+        cfg = dataclasses.replace(cfg, **overrides_cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = fsdp_rules(multi_pod) if cfg.fsdp else {}
+    rules = dict(LOGICAL_RULES)
+    rules.update(overrides)
+    c1 = _cost_of(_probe_cfg(cfg, 1), shape, mesh, rules, overrides)
+    c2 = _cost_of(_probe_cfg(cfg, 2), shape, mesh, rules, overrides)
+    g = _full_groups(cfg)
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        per = c2[k] - c1[k]
+        out[k] = c1[k] + per * (g - 1)
+        out[f"{k}_per_group"] = per
+    out["groups"] = g
+    out["probe1"] = {k: c1[k] for k in ("flops", "bytes", "coll_bytes")}
+    out["coll_mix_probe2"] = {k: v for k, v in c2["coll"].items()
+                              if isinstance(v, dict) and v["count"]}
+    return out
+
+
+def _parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True,
+             probes: bool = True, overrides_cfg: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if overrides_cfg:
+        cfg = dataclasses.replace(cfg, **overrides_cfg)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = fsdp_rules(multi_pod) if cfg.fsdp else {}
+    rules = dict(LOGICAL_RULES)
+    rules.update(overrides)
+    model = Model(cfg)
+    t0 = time.time()
+
+    with set_mesh_rules(mesh, overrides), mesh:
+        params, axes = model.init(abstract=True)
+        p_sh = tree_shardings(params, axes, mesh, rules)
+        p_specs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params, p_sh)
+
+        if shape.kind == "train":
+            opt_specs = jax.eval_shape(adamw_init, params)
+            opt_specs = opt_specs._replace(
+                step=jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+                m=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=sh), opt_specs.m, p_sh),
+                v=jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=sh), opt_specs.v, p_sh))
+            b_specs = batch_specs(cfg, shape, mesh, rules, labels=True)
+            fn = jax.jit(make_train_step(model),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_specs, opt_specs, b_specs)
+        elif shape.kind == "prefill":
+            b_specs = batch_specs(cfg, shape, mesh, rules, labels=False)
+            fn = jax.jit(make_prefill_step(model))
+            lowered = fn.lower(p_specs, b_specs)
+        else:  # decode
+            cache, tokens, pos = decode_specs(cfg, shape, mesh, rules)
+            fn = jax.jit(make_serve_step(model), donate_argnums=(1,))
+            lowered = fn.lower(p_specs, cache, tokens, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not expose it
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "flops_scanned_raw": float(cost.get("flops", 0.0)),
+        "bytes_scanned_raw": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": mem_d,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.active_params(),
+        "analytic": analytic_flops(cfg, shape),
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                        else 1),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if overrides_cfg:
+        rec["overrides"] = overrides_cfg
+    if probes and not multi_pod:   # roofline table is single-pod per brief
+        try:
+            rec["hlo_extrapolated"] = probe_hlo_costs(
+                arch, shape_name, multi_pod=multi_pod,
+                overrides_cfg=overrides_cfg)
+        except Exception as e:
+            rec["hlo_extrapolated"] = {"error": repr(e)[:500]}
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{rec['mesh']}"
+        if tag:
+            name += f"__{tag}"
+        (RESULTS / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    if verbose:
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "mesh", "flops_scanned_raw",
+                           "lower_s", "compile_s")}))
+        print("  memory:", mem_d)
+        print("  collectives:", {k: v for k, v in coll.items()
+                                 if isinstance(v, dict) and v["count"]})
+        if "hlo_extrapolated" in rec:
+            h = rec["hlo_extrapolated"]
+            print("  hlo_extrapolated:", {k: h.get(k) for k in
+                                          ("flops", "bytes", "coll_bytes")})
+        print("  analytic:", rec["analytic"])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig field override, e.g. moe_impl=shard_map")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for perf-iteration A/B records")
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    ov = _parse_overrides(args.override)
+    for a in archs:
+        for s in shapes:
+            rec = run_cell(a, s, multi_pod=args.multi_pod,
+                           probes=not args.no_probes,
+                           overrides_cfg=ov or None, tag=args.tag)
+            if "skipped" in rec:
+                print(f"SKIP {a} {s}: {rec['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

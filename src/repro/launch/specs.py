@@ -1,0 +1,119 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the exact argument pytree each step
+function is lowered with, with NamedShardings attached. Modality frontends
+are stubs per the assignment: [audio] supplies precomputed frame embeddings,
+[vlm] supplies token ids with text-mode M-RoPE ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.lm import init_cache
+from ..parallel.sharding import logical_sharding
+
+
+def _sds(shape, dtype, axes, mesh, rules=None):
+    sh = logical_sharding(axes, shape, mesh, rules) if mesh else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None,
+                rules=None, *, labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.frontend == "frames":
+        out["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16,
+                             ("act_batch", "act_seq", "act_embed"), mesh,
+                             rules)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, ("act_batch", "act_seq"),
+                             mesh, rules)
+        if cfg.family == "vlm" and s >= 256:
+            # vision stub: 256 precomputed patch embeddings per sample
+            out["patch_embeds"] = _sds((b, 256, cfg.d_model), jnp.bfloat16,
+                                       ("act_batch", None, "act_embed"),
+                                       mesh, rules)
+    if labels:
+        out["labels"] = _sds((b, s), jnp.int32, ("act_batch", "act_seq"),
+                             mesh, rules)
+    return out
+
+
+_CACHE_AXES = {
+    "k": (None, "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "v": (None, "act_batch", "act_kv_seq", "act_kv_heads", None),
+    "kpos": (None, None),
+    "c": (None, "act_batch", "act_kv_seq", None),
+    "k_rope": (None, "act_batch", "act_kv_seq", None),
+    "shift": (None, "act_batch", None),
+    "channel_shift": (None, "act_batch", None),
+    "wkv": (None, "act_batch", "act_heads", None, None),
+    "conv": (None, "act_batch", None, "rnn"),
+    "h": (None, "act_batch", "rnn"),
+}
+
+
+def cache_axes(cache) -> dict:
+    """Logical axes tree matching an init_cache pytree (by leaf name)."""
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (_CACHE_AXES[k] if not isinstance(v, dict)
+                        else walk(v)) for k, v in node.items()}
+        raise TypeError(node)
+    return walk(cache)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None,
+                rules=None):
+    cache = init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    if mesh is None:
+        return cache
+    model_n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def axes_for(key, leaf):
+        ax = _CACHE_AXES[key]
+        if key in ("k", "v") and leaf.ndim == 5:
+            # prefer head-sharding when the (possibly replicated) KV heads
+            # divide the model axis — attention is then device-local; fall
+            # back to context-parallel seq sharding otherwise (§Perf iter.)
+            if leaf.shape[3] % model_n == 0:
+                return (None, "act_batch", None, "act_kv_heads", None)
+            return (None, "act_batch", "act_kv_seq", None, None)
+        return ax
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (walk(v) if isinstance(v, dict) else
+                        jax.ShapeDtypeStruct(
+                            v.shape, v.dtype,
+                            sharding=logical_sharding(
+                                axes_for(k, v), v.shape, mesh, rules)))
+                    for k, v in node.items()}
+        raise TypeError(node)
+    return walk(cache)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None,
+                 rules=None):
+    """(cache, tokens, pos) argument specs for serve_step."""
+    b = shape.global_batch
+    cache = cache_specs(cfg, shape, mesh, rules)
+    tokens = _sds((b, 1), jnp.int32, ("act_batch", None), mesh, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None = None,
+                rules=None):
+    """Every model input for the cell as ShapeDtypeStruct stand-ins (the
+    brief's entrypoint): train -> batch dict, prefill -> batch dict,
+    decode -> (cache, tokens, pos)."""
+    if shape.kind == "train":
+        return batch_specs(cfg, shape, mesh, rules, labels=True)
+    if shape.kind == "prefill":
+        return batch_specs(cfg, shape, mesh, rules, labels=False)
+    return decode_specs(cfg, shape, mesh, rules)

@@ -1,0 +1,73 @@
+"""Dry-run sweep over every (arch x shape x mesh) cell, one subprocess per
+cell (isolates XLA state/memory; resumable — existing JSON artifacts are
+skipped). Single-pod cells run first (they carry the roofline probes), then
+the 2x16x16 multi-pod compile proofs.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--only-missing]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+RESULTS = REPO / "results" / "dryrun"
+LOG = REPO / "results" / "sweep_log.txt"
+
+
+def cell_list():
+    from ..configs import SHAPES, get_config, shape_supported
+    from ..configs.registry import ARCH_IDS
+    out = []
+    for multi in (False, True):
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in SHAPES.values():
+                ok, _ = shape_supported(cfg, shape)
+                if ok:
+                    # cheap cells first within each mesh pass
+                    cost = cfg.n_params() * (shape.seq_len ** 0.5)
+                    out.append((multi, cost, arch, shape.name))
+    out.sort(key=lambda t: (t[0], t[1]))
+    return [(m, a, s) for (m, c, a, s) in out]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = cell_list()
+    with LOG.open("a") as log:
+        for multi, arch, shape in todo:
+            mesh = "2x16x16" if multi else "16x16"
+            tag = f"{arch}__{shape}__{mesh}"
+            if (RESULTS / f"{tag}.json").exists():
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if multi:
+                cmd += ["--multi-pod", "--no-probes"]
+            t0 = time.time()
+            print(f"[sweep] {tag} ...", flush=True)
+            r = subprocess.run(
+                cmd, cwd=REPO, timeout=args.timeout,
+                env={**__import__("os").environ, "PYTHONPATH": "src"},
+                capture_output=True, text=True)
+            dt = time.time() - t0
+            status = "OK" if (RESULTS / f"{tag}.json").exists() else \
+                     f"FAIL rc={r.returncode}"
+            line = f"{tag}: {status} in {dt:.0f}s"
+            print(f"[sweep] {line}", flush=True)
+            log.write(line + "\n")
+            if "FAIL" in status:
+                log.write(r.stdout[-2000:] + "\n" + r.stderr[-4000:] + "\n")
+            log.flush()
+    print("[sweep] done")
+
+
+if __name__ == "__main__":
+    main()

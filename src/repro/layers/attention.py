@@ -1,0 +1,157 @@
+"""Attention: GQA projections + an online-softmax (flash-style) jnp core.
+
+The core scans KV chunks carrying running (max, denom, acc) so the [Sq, Skv]
+score matrix is never materialised — this is what keeps the 32k-prefill and
+500k-window cells compileable with sane memory, and it mirrors the structure
+a Pallas flash kernel would have on real TPUs (kv-chunk loop in VMEM).
+
+Supports: causal / bidirectional / sliding-window masks, GQA head groups,
+separate K and V head dims (for MLA), and decode (Sq=1 against a cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ParamCollector, shard
+from ..utils.flags import scan_unroll
+from .rope import apply_rope, mrope_cos_sin, rope_cos_sin
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool, q_offset, window: int = 0,
+                    kv_len: jnp.ndarray | None = None,
+                    k_positions: jnp.ndarray | None = None,
+                    chunk: int = 1024, scale: float | None = None
+                    ) -> jnp.ndarray:
+    """q [B,Sq,H,Dk], k [B,Skv,KVH,Dk], v [B,Skv,KVH,Dv] -> [B,Sq,H,Dv].
+
+    ``q_offset``: absolute position of q[0] (decode passes the write pos;
+    train passes 0). ``window`` > 0 masks keys further than window-1 behind
+    the query. ``kv_len``: optional valid cache length (keys >= kv_len are
+    masked; superseded by causal masking when q_offset is exact).
+    ``k_positions``: explicit absolute key positions [Skv] (ring-buffer
+    caches pass these; unwritten slots carry a large negative position).
+    """
+    b, sq, h, dk = q.shape
+    _, skv, kvh, dv = v.shape
+    g = h // kvh
+    scale = scale if scale is not None else dk ** -0.5
+    nc = max(skv // chunk, 1)
+    chunk = skv // nc
+    assert skv % nc == 0
+
+    qf = q.reshape(b, sq, kvh, g, dk)
+    kc = k.reshape(b, nc, chunk, kvh, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kvh, dv).transpose(1, 0, 2, 3, 4)
+    if k_positions is None:
+        k_positions = jnp.arange(skv, dtype=jnp.int32)
+    kpc = k_positions.reshape(nc, chunk)
+
+    q_pos = q_offset + jnp.arange(sq, dtype=jnp.int32)          # [Sq]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kch, vch, k_pos = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kch,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vch.dtype), vch,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nc, dtype=jnp.int32), kc, vc, kpc),
+        unroll=scan_unroll() and nc <= 64)   # probe-unroll cap: HLO size
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def init_gqa(col: ParamCollector, n: int, d_model: int, n_heads: int,
+             n_kv: int, head_dim: int, key, name: str = "attn") -> dict:
+    with col.scope(name):
+        return {
+            "wq": col.param("wq", (n, d_model, n_heads, head_dim),
+                            (None, "embed", "heads", "head_dim"), key,
+                            "scaled"),
+            "wk": col.param("wk", (n, d_model, n_kv, head_dim),
+                            (None, "embed", "kv_heads", "head_dim"), key,
+                            "scaled"),
+            "wv": col.param("wv", (n, d_model, n_kv, head_dim),
+                            (None, "embed", "kv_heads", "head_dim"), key,
+                            "scaled"),
+            "wo": col.param("wo", (n, n_heads, head_dim, d_model),
+                            (None, "heads", "head_dim", "embed"), key,
+                            "scaled"),
+        }
+
+
+def apply_gqa(p: dict, x: jnp.ndarray, cfg, *, pos_ids, cache=None,
+              write_pos=None, window: int = 0, causal: bool = True
+              ) -> tuple[jnp.ndarray, dict | None]:
+    """GQA block. cache: {"k","v"} [B, S_cache, KVH, D] (decode) or None.
+
+    pos_ids: [B, S] int32 (or [3, B, S] when cfg.mrope_sections is set).
+    write_pos: scalar position at which to insert this step's K/V (decode).
+    """
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+
+    hd = q.shape[-1]
+    if cfg.mrope_sections:
+        cos, sin = mrope_cos_sin(pos_ids, hd, cfg.rope_theta,
+                                 cfg.mrope_sections)
+    else:
+        cos, sin = rope_cos_sin(pos_ids, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = flash_attention(q, k, v, causal=causal, q_offset=0,
+                              window=window)
+        new_cache = None
+    else:
+        kvh_cache = cache["k"].shape[-2]
+        if kvh_cache != k.shape[-2]:
+            # KV-head replication (cfg.kv_replicate_to): pad heads to the
+            # model-axis size so the cache head-shards and each device's q
+            # group attends to its local KV head — no cache collectives.
+            rep = kvh_cache // k.shape[-2]
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+            k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+            v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+        out = flash_attention(q, ck.astype(dtype), cv.astype(dtype),
+                              causal=True, q_offset=write_pos, window=window)
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return shard(y, "act_batch", "act_seq", "act_embed"), new_cache

@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2): low-rank compressed KV.
+
+K/V are generated from a shared ``kv_lora``-dim latent ``c`` (plus one shared
+rope key band); the decode cache stores only ``c`` and ``k_rope`` —
+(512+64) floats/token instead of 2*128*128 — which is what makes the
+deepseek decode cells dramatically lighter in the roofline table. The paper's
+PLEX page-table serves this compressed cache like any other (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ParamCollector, shard
+from .attention import flash_attention
+from .norms import rms_norm
+from .rope import apply_rope, rope_cos_sin
+
+
+def init_mla(col: ParamCollector, n: int, cfg, key, name: str = "attn"
+             ) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    with col.scope(name):
+        p = {
+            "wkv_a": col.param("wkv_a", (n, d, cfg.kv_lora + cfg.rope_head_dim),
+                               (None, "embed", "kv_lora"), key, "scaled"),
+            "kv_norm": col.param("kv_norm", (n, cfg.kv_lora),
+                                 (None, "norm"), key, "ones"),
+            "wkv_b": col.param(
+                "wkv_b", (n, cfg.kv_lora, h, cfg.nope_head_dim + cfg.v_head_dim),
+                (None, "kv_lora", "heads", "head_dim"), key, "scaled"),
+            "wo": col.param("wo", (n, h, cfg.v_head_dim, d),
+                            (None, "heads", "head_dim", "embed"), key,
+                            "scaled"),
+        }
+        if cfg.q_lora:
+            p["wq_a"] = col.param("wq_a", (n, d, cfg.q_lora),
+                                  (None, "embed", "q_lora"), key, "scaled")
+            p["q_norm"] = col.param("q_norm", (n, cfg.q_lora),
+                                    (None, "norm"), key, "ones")
+            p["wq_b"] = col.param("wq_b", (n, cfg.q_lora, h, qk),
+                                  (None, "q_lora", "heads", "head_dim"), key,
+                                  "scaled")
+        else:
+            p["wq"] = col.param("wq", (n, d, h, qk),
+                                (None, "embed", "heads", "head_dim"), key,
+                                "scaled")
+        return p
+
+
+def _project_kv(p: dict, c: jnp.ndarray, cfg, dtype):
+    """Latent c [B,S,kv_lora] -> k_nope [B,S,H,nope], v [B,S,H,v_dim]."""
+    kv = jnp.einsum("bsl,lhd->bshd", c.astype(dtype), p["wkv_b"].astype(dtype))
+    return kv[..., :cfg.nope_head_dim], kv[..., cfg.nope_head_dim:]
+
+
+def _decode_absorbed(p, cfg, q_nope, q_rope, c, k_rope, pos, dtype):
+    """Weight-absorbed MLA decode (cfg.mla_absorb, §Perf D).
+
+    Fold W_kv_b into the query/output instead of expanding per-head K/V
+    over the whole cache: scores live in the kv_lora latent space
+    (q~ = q_nope @ W_bk per head; attention context stays [B,H,kv_lora]
+    and is projected to v-dim once). Per step this removes the
+    [B,S,H,nope+v] cache expansion — the dominant decode FLOPs/bytes —
+    and under a seq-sharded cache GSPMD reduces softmax/context with
+    scalar-sized collectives instead of gathering the cache."""
+    wb = p["wkv_b"].astype(dtype)                       # [L, H, nope+v]
+    wbk = wb[..., :cfg.nope_head_dim]                   # [L, H, nope]
+    wbv = wb[..., cfg.nope_head_dim:]                   # [L, H, v]
+    # q~ [B,1,H,L]: absorb the key projection into the query
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wbk)
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bshl,btl->bhst", q_lat, c)      # [B,H,1,S]
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    t_pos = jnp.arange(c.shape[1], dtype=jnp.int32)
+    mask = t_pos[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bhst,btl->bshl", prob, c)         # [B,1,H,L]
+    return jnp.einsum("bshl,lhv->bshv", ctx, wbv)       # [B,1,H,v]
+
+
+def apply_mla(p: dict, x: jnp.ndarray, cfg, *, pos_ids, cache=None,
+              write_pos=None) -> tuple[jnp.ndarray, dict | None]:
+    """cache: {"c": [B,Sc,kv_lora], "k_rope": [B,Sc,rope_dim]} or None."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+
+    if cfg.q_lora:
+        qa = rms_norm(jnp.einsum("bsd,dl->bsl", x, p["wq_a"].astype(dtype)),
+                      p["q_norm"])
+        q = jnp.einsum("bsl,lhd->bshd", qa, p["wq_b"].astype(dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    q_nope, q_rope = (q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:])
+
+    kv_a = jnp.einsum("bsd,dl->bsl", x, p["wkv_a"].astype(dtype))
+    c_new = rms_norm(kv_a[..., :cfg.kv_lora], p["kv_norm"])
+    k_rope_new = kv_a[..., cfg.kv_lora:]                      # [B,S,rope]
+
+    cos, sin = rope_cos_sin(pos_ids, cfg.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_new = apply_rope(k_rope_new, cos, sin)             # shared band
+
+    if cache is None:
+        c, k_rope = c_new, k_rope_new
+        q_offset = 0
+        new_cache = None
+    else:
+        c = jax.lax.dynamic_update_slice(
+            cache["c"], c_new.astype(cache["c"].dtype), (0, write_pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            (0, write_pos, 0))
+        q_offset = write_pos
+        new_cache = {"c": c, "k_rope": k_rope}
+        c, k_rope = c.astype(dtype), k_rope.astype(dtype)
+        if cfg.mla_absorb:
+            y = _decode_absorbed(p, cfg, q_nope, q_rope, c, k_rope,
+                                 write_pos, dtype)
+            y = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(dtype))
+            return shard(y, "act_batch", "act_seq", "act_embed"), new_cache
+
+    k_nope, v = _project_kv(p, c, cfg, dtype)                 # full-head K/V
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_nope.shape[:3], cfg.rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    out = flash_attention(qq, k, v, causal=True, q_offset=q_offset,
+                          scale=(cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return shard(y, "act_batch", "act_seq", "act_embed"), new_cache

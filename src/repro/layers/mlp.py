@@ -1,0 +1,31 @@
+"""Gated MLPs (SwiGLU / GeGLU) with TP sharding on the hidden dim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ParamCollector, shard
+
+
+def init_mlp(col: ParamCollector, n: int, d_model: int, d_ff: int,
+             key, name: str = "mlp") -> dict:
+    with col.scope(name):
+        return {
+            "wi_gate": col.param("wi_gate", (n, d_model, d_ff),
+                                 (None, "embed", "mlp"), key, "scaled"),
+            "wi_up": col.param("wi_up", (n, d_model, d_ff),
+                               (None, "embed", "mlp"), key, "scaled"),
+            "wo": col.param("wo", (n, d_ff, d_model),
+                            (None, "mlp", "embed"), key, "scaled"),
+        }
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    """x [B, S, d]; p leaves carry their scan-stacked leading dim stripped."""
+    dtype = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dtype))
+    g = shard(g, "act_batch", "act_seq", "act_mlp")
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+    return shard(out, "act_batch", "act_seq", "act_embed")

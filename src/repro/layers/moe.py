@@ -1,0 +1,210 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch (EP over the
+``model`` mesh axis) + optional shared experts.
+
+Dispatch is the sort-free scatter/gather formulation: per-(token, slot)
+expert assignments and positions-in-expert come from a cumulative one-hot;
+tokens beyond capacity are dropped (MaxText-style "dropping" MoE). The
+token->expert buffer reshard is what generates the all-to-alls visible in the
+dry-run HLO — EP cost is measured, not hidden. Expert count is padded up to
+the mesh divisor when needed (qwen2's 60 -> 64; pads receive -inf router
+logits and zero tokens).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import ParamCollector, shard
+from .mlp import apply_mlp, init_mlp
+
+
+def padded_experts(n_experts: int, mesh_divisor: int = 16) -> int:
+    return int(np.ceil(n_experts / mesh_divisor) * mesh_divisor)
+
+
+def init_moe(col: ParamCollector, n: int, cfg, key, name: str = "moe") -> dict:
+    d = cfg.d_model
+    e = padded_experts(cfg.n_experts)
+    with col.scope(name):
+        p = {
+            "router": col.param("router", (n, d, e), (None, "embed", None),
+                                key, "scaled"),
+            "w_gate": col.param("w_gate", (n, e, d, cfg.expert_dff),
+                                (None, "expert", "embed", "expert_mlp"), key,
+                                "scaled"),
+            "w_up": col.param("w_up", (n, e, d, cfg.expert_dff),
+                              (None, "expert", "embed", "expert_mlp"), key,
+                              "scaled"),
+            "w_down": col.param("w_down", (n, e, cfg.expert_dff, d),
+                                (None, "expert", "expert_mlp", "embed"), key,
+                                "scaled"),
+        }
+        if cfg.n_shared:
+            p["shared"] = init_mlp(col, n, d, cfg.shared_dff or cfg.expert_dff,
+                                   key, "shared")
+        return p
+
+
+def apply_moe(p: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,d] -> (y [B,S,d], aux loss). Dispatches on cfg.moe_impl."""
+    if cfg.moe_impl == "shard_map":
+        from ..parallel.sharding import _current
+        mesh, _ = _current()
+        if mesh is not None and "model" in mesh.axis_names:
+            return _apply_moe_shard_map(p, x, cfg, mesh)
+    return _apply_moe_gspmd(p, x, cfg)
+
+
+def _apply_moe_gspmd(p: dict, x: jnp.ndarray, cfg
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Baseline: global scatter/gather dispatch, GSPMD chooses collectives.
+
+    The dry-run showed GSPMD resolves the data-sharded-updates-into-
+    expert-sharded-buffer scatter by replicating + all-reducing the full
+    [E, C, d] buffer per layer — the dominant collective cost of every MoE
+    cell (EXPERIMENTS.md §Perf iteration 1). Kept as the A/B baseline."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    e = p["router"].shape[-1]
+    k = cfg.top_k
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(((cap + 127) // 128) * 128, 128)
+
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if e > cfg.n_experts:  # padded experts never win
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    gates, idx = jax.lax.top_k(logits, k)          # [T,k]
+    weights = jax.nn.softmax(gates, axis=-1)       # normalise over top-k
+
+    # load-balance aux loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * float(e)
+
+    # position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)       # [T,k,E]
+    flat = onehot.reshape(t * k, e)
+    pos = (jnp.cumsum(flat, axis=0) - flat)                # exclusive
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)       # [T,k]
+    keep = pos < cap
+
+    eid = idx.reshape(-1)
+    pid = jnp.where(keep, pos, cap - 1).reshape(-1)
+    tok = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    wk = jnp.where(keep, weights, 0.0).reshape(-1)
+
+    buf = jnp.zeros((e, cap, d), dtype)
+    buf = buf.at[eid, pid].add(
+        xt[tok] * keep.reshape(-1)[:, None].astype(dtype))
+    buf = shard(buf, "act_expert", "act_batch", "act_embed")
+
+    h_g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dtype))
+    h_u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dtype))
+    h = jax.nn.silu(h_g) * h_u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+    out_buf = shard(out_buf, "act_expert", "act_batch", "act_embed")
+
+    gathered = out_buf[eid, pid]                           # [T*k, d]
+    y = jnp.zeros((t, d), dtype).at[tok].add(
+        gathered * wk[:, None].astype(dtype))
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, "swiglu")
+    return shard(y, "act_batch", "act_seq", "act_embed"), aux
+
+
+def _apply_moe_shard_map(p: dict, x: jnp.ndarray, cfg, mesh
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel dispatch with *local* routing (§Perf iteration 1).
+
+    Inside shard_map every device: (i) routes its local tokens with the
+    replicated router (decisions are bitwise-identical across the model
+    axis), (ii) scatters only the tokens assigned to its model-shard's
+    experts into a LOCAL [E_loc, C_loc, d] buffer (no cross-device
+    scatter), (iii) runs its expert matmuls, (iv) combines locally, and
+    (v) one psum over "model" sums each token's k expert contributions.
+    Collectives per layer: exactly one [T_loc, d] all-reduce — the
+    Megatron-EP pattern — instead of GSPMD's replicate+all-reduce of the
+    global dispatch buffer. Capacity is per (model-shard, expert); the drop
+    policy therefore becomes shard-local (documented in DESIGN.md §9)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dtype = x.dtype
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    k = cfg.top_k
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_model = mesh.shape["model"]
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    e_loc = e // n_model
+    t_loc = (b // n_batch) * s
+    cap = int(np.ceil(t_loc * k / e * cfg.capacity_factor))
+    cap = max(((cap + 127) // 128) * 128, 128)
+
+    def body(xb, router, w_gate, w_up, w_down):
+        tl = xb.shape[0] * xb.shape[1]
+        xt = xb.reshape(tl, d)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        if e > cfg.n_experts:
+            pad = jnp.arange(e) >= cfg.n_experts
+            logits = jnp.where(pad[None, :], -1e30, logits)
+        gates, idx = jax.lax.top_k(logits, k)
+        weights = jax.nn.softmax(gates, axis=-1)
+
+        probs = jax.nn.softmax(logits, axis=-1)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32),
+                      axis=0)
+        if batch_axes:
+            me = jax.lax.pmean(me, batch_axes)
+            ce = jax.lax.pmean(ce, batch_axes)
+        aux = jnp.sum(me * ce) * float(e)
+
+        rank = jax.lax.axis_index("model")
+        base = rank * e_loc
+        eid = idx.reshape(-1)
+        mine = (eid >= base) & (eid < base + e_loc)
+        eid_loc = jnp.where(mine, eid - base, 0)
+        onehot = (jax.nn.one_hot(eid_loc, e_loc, dtype=jnp.int32)
+                  * mine.reshape(-1, 1))
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pid = jnp.sum(pos * onehot, axis=-1)
+        keep = mine & (pid < cap)
+        pid = jnp.where(keep, pid, cap - 1)
+        tok = jnp.broadcast_to(jnp.arange(tl)[:, None], (tl, k)).reshape(-1)
+        wk = jnp.where(keep, weights.reshape(-1), 0.0)
+
+        buf = jnp.zeros((e_loc, cap, d), dtype)
+        buf = buf.at[eid_loc, pid].add(
+            xt[tok] * keep[:, None].astype(dtype))
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                                    w_gate.astype(dtype)))
+             * jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype)))
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dtype))
+        gathered = out_buf[eid_loc, pid]
+        y = jnp.zeros((tl, d), dtype).at[tok].add(
+            gathered * wk[:, None].astype(dtype))
+        y = jax.lax.psum(y, "model")
+        return y.reshape(xb.shape), aux
+
+    xspec = P(batch_axes if batch_axes else None, None, None)
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(xspec, P()),
+        check_rep=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, "swiglu")
+    return shard(y, "act_batch", "act_seq", "act_embed"), aux

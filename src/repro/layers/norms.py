@@ -1,0 +1,33 @@
+"""Normalisation layers (f32 statistics regardless of activation dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def group_norm_heads(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+                     eps: float = 64e-5) -> jnp.ndarray:
+    """GroupNorm over the head dim (RWKV's wkv output norm); x: [..., H, D]."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Diagonal gated linear recurrence — h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t)
+with a_t = exp(-c * softplus(L) * r_t) — computed with
+``jax.lax.associative_scan`` over time (log-depth, TPU-friendly), preceded by
+a width-4 causal depthwise conv. Decode carries {conv tail, h} state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ParamCollector, shard
+
+RGLRU_C = 8.0
+
+
+def init_rglru(col: ParamCollector, n: int, cfg, key, name: str = "rglru"
+               ) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    cw = cfg.conv_width
+    with col.scope(name):
+        return {
+            "wx": col.param("wx", (n, d, w), (None, "embed", "rnn"), key,
+                            "scaled"),
+            "wgate": col.param("wgate", (n, d, w), (None, "embed", "rnn"),
+                               key, "scaled"),
+            "conv_w": col.param("conv_w", (n, cw, w), (None, "conv", "rnn"),
+                                key),
+            "conv_b": col.param("conv_b", (n, w), (None, "rnn"), key, "zeros"),
+            "lam": col.param("lam", (n, w), (None, "rnn"), key, "ones"),
+            "wa": col.param("wa", (n, w, w), (None, "rnn", None), key,
+                            "scaled"),
+            "ba": col.param("ba", (n, w), (None, "rnn"), key, "zeros"),
+            "wi": col.param("wi", (n, w, w), (None, "rnn", None), key,
+                            "scaled"),
+            "bi": col.param("bi", (n, w), (None, "rnn"), key, "zeros"),
+            "wo": col.param("wo", (n, w, d), (None, "rnn", "embed"), key,
+                            "scaled"),
+        }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray | None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv; x [B,S,W], w [CW,W]. Returns (y, new_tail)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+            for i in range(cw)) + b[None, None]
+    return y, xp[:, -(cw - 1):].astype(jnp.float32)
+
+
+def _rglru_scan(x: jnp.ndarray, a: jnp.ndarray, h0: jnp.ndarray | None
+                ) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t via associative scan; x=b [B,S,W] f32."""
+    if h0 is not None:
+        # fold the incoming state into the first step
+        x = x.at[:, 0].add(a[:, 0] * h0)
+        a = a.at[:, 0].set(jnp.zeros_like(a[:, 0]))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def apply_rglru(p: dict, x: jnp.ndarray, cfg, *, state=None
+                ) -> tuple[jnp.ndarray, dict | None]:
+    """Griffin recurrent block. state: {"conv": [B,CW-1,W] f32,
+    "h": [B,W] f32} or None (train)."""
+    dtype = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, p["wx"].astype(dtype))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wgate"].astype(dtype)))
+    u = shard(u, "act_batch", "act_seq", "rnn")
+
+    tail = None if state is None else state["conv"]
+    u, new_tail = _causal_conv(u, p["conv_w"].astype(dtype),
+                               p["conv_b"].astype(dtype), tail)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf,
+                                  p["wa"].astype(jnp.float32))
+                       + p["ba"].astype(jnp.float32)[None, None])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf,
+                                  p["wi"].astype(jnp.float32))
+                       + p["bi"].astype(jnp.float32)[None, None])
+    log_a = -RGLRU_C * jax.nn.softplus(
+        p["lam"].astype(jnp.float32))[None, None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    if state is None:
+        h = _rglru_scan(b, a, None)
+        new_state = None
+    else:
+        h = a[:, 0] * state["h"] + b[:, 0]
+        new_state = {"conv": new_tail, "h": h}
+        h = h[:, None]
+
+    y = (h.astype(dtype)) * gate
+    y = jnp.einsum("bsw,wd->bsd", y, p["wo"].astype(dtype))
+    return shard(y, "act_batch", "act_seq", "act_embed"), new_state

@@ -1,0 +1,48 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies [head_dim//2], float32."""
+    i = jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+    return 1.0 / (theta ** (i / head_dim))
+
+
+def rope_cos_sin(pos: jnp.ndarray, head_dim: int, theta: float
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """pos [B, S] int32 -> (cos, sin) [B, S, head_dim//2] float32."""
+    ang = pos.astype(jnp.float32)[..., None] * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(pos3: jnp.ndarray, head_dim: int, theta: float,
+                  sections: tuple[int, ...]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """M-RoPE (Qwen2-VL): pos3 [3, B, S] (t/h/w streams); ``sections`` split
+    head_dim//2 into per-stream bands. Text tokens carry equal streams, which
+    reduces to plain RoPE; the vision frontend (stubbed) supplies 3D ids."""
+    assert sum(sections) == head_dim // 2
+    freqs = rope_freqs(head_dim, theta)
+    cos_parts, sin_parts = [], []
+    start = 0
+    for s, sec in zip(pos3, sections):
+        f = freqs[start:start + sec]
+        ang = s.astype(jnp.float32)[..., None] * f
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x [B, S, H, D] (or [B, S, D] shared); cos/sin [B, S, D//2]."""
+    orig = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if x.ndim == 4:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(orig)

@@ -1,0 +1,195 @@
+"""RWKV6 "Finch": token-shift + data-dependent-decay WKV recurrence.
+
+TPU adaptation (DESIGN.md §3/§9): training/prefill uses the *chunked
+parallel* form of the linear recurrence — intra-chunk work becomes MXU
+matmuls, inter-chunk state is a short scan — instead of a T-step sequential
+loop. Per-channel log-decays are clamped at -4 per step so all chunk-local
+exponentials stay inside float32 range (a decay of e^-4 per step is already
+"forget everything in two steps"; divergence vs. the exact recurrence is
+below test tolerance). Decode uses the exact one-step recurrence; a property
+test asserts chunked == sequential within tolerance.
+
+Simplification vs. the reference implementation (noted): token-shift mixing
+coefficients are static per-channel lerps (RWKV6's dynamic ddlerp LoRA is
+folded into the decay LoRA only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ParamCollector, shard
+from .norms import group_norm_heads
+
+LOGW_MIN = -4.0
+CHUNK = 16
+
+
+def init_rwkv_time(col: ParamCollector, n: int, cfg, key,
+                   name: str = "time_mix") -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    lora = 64
+    with col.scope(name):
+        return {
+            "mu": col.param("mu", (n, 5, d), (None, None, "embed"), key),
+            "wr": col.param("wr", (n, d, d), (None, "embed", "heads"), key,
+                            "scaled"),
+            "wk": col.param("wk", (n, d, d), (None, "embed", "heads"), key,
+                            "scaled"),
+            "wv": col.param("wv", (n, d, d), (None, "embed", "heads"), key,
+                            "scaled"),
+            "wg": col.param("wg", (n, d, d), (None, "embed", "heads"), key,
+                            "scaled"),
+            "w0": col.param("w0", (n, d), (None, "embed"), key),
+            "wa": col.param("wa", (n, d, lora), (None, "embed", "lora"), key,
+                            "scaled"),
+            "wb": col.param("wb", (n, lora, d), (None, "lora", "embed"), key,
+                            "scaled"),
+            "u": col.param("u", (n, h, hs), (None, "heads", "head_dim"), key),
+            "gn_w": col.param("gn_w", (n, d), (None, "norm"), key, "ones"),
+            "gn_b": col.param("gn_b", (n, d), (None, "norm"), key, "zeros"),
+            "wo": col.param("wo", (n, d, d), (None, "heads", "embed"), key,
+                            "scaled"),
+        }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None) -> jnp.ndarray:
+    """x_{t-1} per position; ``prev`` is the last token of the previous
+    segment (decode state) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u):
+    """r/k/v/logw [B,S,H,D] f32, u [H,D] -> o [B,S,H,D], final state.
+
+    Chunked parallel linear attention with per-channel decay (see module
+    docstring for the exponent-range argument).
+    """
+    b, s, h, dd = r.shape
+    c = min(CHUNK, s)
+    n = s // c
+    assert s % c == 0
+    rc = r.reshape(b, n, c, h, dd)
+    kc = k.reshape(b, n, c, h, dd)
+    vc = v.reshape(b, n, c, h, dd)
+    lw = logw.reshape(b, n, c, h, dd)
+
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)   # strict lower
+
+    def body(state, inp):
+        rcc, kcc, vcc, lwc = inp                # [B,C,H,D]
+        cum = jnp.cumsum(lwc, axis=1)           # inclusive
+        cum_prev = cum - lwc                    # exclusive
+        r_st = rcc * jnp.exp(cum_prev)
+        o1 = jnp.einsum("bchk,bhkv->bchv", r_st, state)
+        k_in = kcc * jnp.exp(-cum)
+        scores = jnp.einsum("bchk,bghk->bhcg", r_st, k_in)
+        scores = scores * mask[None, None]
+        o2 = jnp.einsum("bhcg,bghv->bchv", scores, vcc)
+        diag = jnp.sum(rcc * u[None, None] * kcc, axis=-1)  # [B,C,H]
+        o = o1 + o2 + diag[..., None] * vcc
+        dec_all = jnp.exp(cum[:, -1])           # [B,H,D]
+        k_end = kcc * jnp.exp(cum[:, -1][:, None] - cum)
+        state = (state * dec_all[..., None]
+                 + jnp.einsum("bchk,bchv->bhkv", k_end, vcc))
+        return state, o
+
+    state0 = jnp.zeros((b, h, dd, dd), jnp.float32)
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4))
+    # NOTE: never unrolled by the dry-run probes (S/16 bodies would explode
+    # the HLO); the probes' HLO flops under-count the intra-WKV term by
+    # ~(S/16 - 1) bodies, a ~2% per-layer error vs. the projection matmuls —
+    # the analytic model carries the exact term (EXPERIMENTS.md §Roofline).
+    state, o = jax.lax.scan(body, state0, xs)
+    return o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dd), state
+
+
+def wkv_step(state, r, k, v, logw, u):
+    """Exact single-step recurrence (decode). r/k/v/logw [B,H,D]."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, ..., None] * kv)
+    state = state * jnp.exp(logw)[..., None] + kv
+    return state, o
+
+
+def apply_rwkv_time(p: dict, x: jnp.ndarray, cfg, *, state=None
+                    ) -> tuple[jnp.ndarray, dict | None]:
+    """state (decode): {"shift": [B,d], "wkv": [B,H,D,D]} or None (train)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    prev = None if state is None else state["shift"].astype(dtype)
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(dtype)                      # [5, d]
+    xr, xk, xv, xw, xg = (x + mu[i][None, None] * (xs - x) for i in range(5))
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dtype)))
+    lora = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                               p["wa"].astype(jnp.float32)))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)[None, None]
+                    + jnp.einsum("bsl,ld->bsd", lora,
+                                 p["wb"].astype(jnp.float32)))
+    logw = jnp.maximum(logw, LOGW_MIN)
+
+    rf = r.astype(jnp.float32).reshape(b, s, h, hs)
+    kf = k.astype(jnp.float32).reshape(b, s, h, hs)
+    vf = v.astype(jnp.float32).reshape(b, s, h, hs)
+    lw = logw.reshape(b, s, h, hs)
+    u = p["u"].astype(jnp.float32)
+
+    if state is None:
+        o, _ = _wkv_chunked(rf, kf, vf, lw, u)
+        new_state = None
+    else:
+        st, o1 = wkv_step(state["wkv"].astype(jnp.float32), rf[:, 0],
+                          kf[:, 0], vf[:, 0], lw[:, 0], u)
+        o = o1[:, None]
+        new_state = {"shift": x[:, -1].astype(jnp.float32), "wkv": st}
+
+    o = group_norm_heads(o, p["gn_w"].reshape(h, hs),
+                         p["gn_b"].reshape(h, hs))
+    o = (o.reshape(b, s, d).astype(dtype)) * g
+    y = jnp.einsum("bsd,de->bse", o, p["wo"].astype(dtype))
+    return shard(y, "act_batch", "act_seq", "act_embed"), new_state
+
+
+def init_rwkv_channel(col: ParamCollector, n: int, cfg, key,
+                      name: str = "channel_mix") -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    with col.scope(name):
+        return {
+            "mu": col.param("mu", (n, 2, d), (None, None, "embed"), key),
+            "wk": col.param("wk", (n, d, f), (None, "embed", "mlp"), key,
+                            "scaled"),
+            "wv": col.param("wv", (n, f, d), (None, "mlp", "embed"), key,
+                            "scaled"),
+            "wr": col.param("wr", (n, d, d), (None, "embed", "heads"), key,
+                            "scaled"),
+        }
+
+
+def apply_rwkv_channel(p: dict, x: jnp.ndarray, *, state=None
+                       ) -> tuple[jnp.ndarray, dict | None]:
+    """state (decode): {"shift": [B,d]} or None."""
+    dtype = x.dtype
+    prev = None if state is None else state["shift"].astype(dtype)
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(dtype)
+    xk = x + mu[0][None, None] * (xs - x)
+    xr = x + mu[1][None, None] * (xs - x)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "act_batch", "act_seq", "act_mlp")
+    vv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype)))
+    new_state = None if state is None else {
+        "shift": x[:, -1].astype(jnp.float32)}
+    return shard(rr * vv, "act_batch", "act_seq", "act_embed"), new_state

@@ -1,0 +1,3 @@
+from .lm import Model, init_cache
+
+__all__ = ["Model", "init_cache"]

@@ -1,0 +1,364 @@
+"""Unified LM-family model covering all 10 assigned architectures.
+
+A model is a list of *segments*; each segment is a block pattern scanned over
+``repeats`` stacked parameter slices (scan-over-layers keeps HLO size and
+compile time flat in depth — essential for the 40-cell dry-run sweep).
+Patterns cover: GQA / sliding-window attention, MLA, MoE or dense MLPs,
+RWKV6 time/channel mix, and RG-LRU recurrent blocks; ``cfg.layer_kind``
+decides per-layer kinds (deepseek's first dense layer becomes its own
+segment, Griffin's (rec, rec, attn) triple scans as one pattern).
+
+Decode carries a cache pytree with one stacked entry per segment position:
+KV (full or ring-buffer window), MLA latents, WKV state, or RG-LRU state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..layers.attention import flash_attention, init_gqa
+from ..layers.mla import apply_mla, init_mla
+from ..layers.mlp import apply_mlp, init_mlp
+from ..layers.moe import apply_moe, init_moe
+from ..layers.norms import rms_norm
+from ..layers.rglru import apply_rglru, init_rglru
+from ..layers.rope import apply_rope, mrope_cos_sin, rope_cos_sin
+from ..layers.rwkv import (apply_rwkv_channel, apply_rwkv_time,
+                           init_rwkv_channel, init_rwkv_time)
+from ..parallel import ParamCollector, shard
+from ..utils.flags import scan_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: tuple[tuple[str, str], ...]   # ((mixer, mlp), ...) per position
+    repeats: int
+
+
+def build_segments(cfg: ArchConfig) -> list[Segment]:
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    if cfg.block_pattern:
+        pl = len(cfg.block_pattern)
+        reps = cfg.n_layers // pl
+        segs = [Segment(tuple(kinds[:pl]), reps)]
+        if cfg.n_layers % pl:
+            segs.append(Segment(tuple(kinds[reps * pl:]), 1))
+        return segs
+    segs: list[Segment] = []
+    i = 0
+    while i < cfg.n_layers:
+        j = i
+        while j < cfg.n_layers and kinds[j] == kinds[i]:
+            j += 1
+        segs.append(Segment((kinds[i],), j - i))
+        i = j
+    return segs
+
+
+# ---------------------------------------------------------------- init ----
+
+def _init_block(col: ParamCollector, kind: tuple[str, str], n: int,
+                cfg: ArchConfig, key) -> dict:
+    mixer, mlpk = kind
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": col.param("ln1", (n, d), (None, "norm"),
+                                          key, "ones")}
+    if mixer in ("gqa", "wattn"):
+        p["mixer"] = init_gqa(col, n, d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.resolved_head_dim, key, "mixer")
+    elif mixer == "mla":
+        p["mixer"] = init_mla(col, n, cfg, key, "mixer")
+    elif mixer == "rwkv":
+        p["mixer"] = init_rwkv_time(col, n, cfg, key, "mixer")
+    elif mixer == "rglru":
+        p["mixer"] = init_rglru(col, n, cfg, key, "mixer")
+    else:
+        raise ValueError(mixer)
+    if not cfg.parallel_block:
+        p["ln2"] = col.param("ln2", (n, d), (None, "norm"), key, "ones")
+    if mlpk == "mlp":
+        p["mlp"] = init_mlp(col, n, d, cfg.d_ff, key, "mlp")
+    elif mlpk == "moe":
+        p["mlp"] = init_moe(col, n, cfg, key, "mlp")
+    elif mlpk == "rwkv_cm":
+        p["mlp"] = init_rwkv_channel(col, n, cfg, key, "mlp")
+    else:
+        raise ValueError(mlpk)
+    return p
+
+
+def init_params(cfg: ArchConfig, key=None, *, abstract: bool = False
+                ) -> tuple[dict, dict[str, tuple[str, ...]]]:
+    """(params, logical-axes-by-path). abstract=True -> ShapeDtypeStructs."""
+    col = ParamCollector(param_dtype=jnp.dtype(cfg.param_dtype),
+                         abstract=abstract)
+    if key is None and not abstract:
+        key = jax.random.PRNGKey(0)
+    params: dict[str, Any] = {}
+    if cfg.frontend == "frames":
+        params["in_proj"] = col.param("in_proj", (cfg.d_model, cfg.d_model),
+                                      ("embed", None), key, "scaled")
+    params["embed"] = col.param("embed", (cfg.vocab, cfg.d_model),
+                                ("vocab", "embed"), key)
+    for si, seg in enumerate(build_segments(cfg)):
+        with col.scope(f"seg{si}"):
+            params[f"seg{si}"] = {
+                f"blk{bi}": _init_block_scoped(col, kind, seg.repeats, cfg,
+                                               key, bi)
+                for bi, kind in enumerate(seg.pattern)}
+    params["final_norm"] = col.param("final_norm", (cfg.d_model,), ("norm",),
+                                     key, "ones")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = col.param("lm_head", (cfg.d_model, cfg.vocab),
+                                      ("embed", "vocab"), key)
+    return params, col.axes
+
+
+def _init_block_scoped(col, kind, n, cfg, key, bi):
+    with col.scope(f"blk{bi}"):
+        return _init_block(col, kind, n, cfg, key)
+
+
+# --------------------------------------------------------------- apply ----
+
+def _pos_ids(cfg: ArchConfig, b: int, s: int, offset) -> jnp.ndarray:
+    pos = offset + jnp.arange(s, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos[None], (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))   # text stub: t=h=w
+    return pos
+
+
+def _apply_gqa_block(p, x, cfg, *, pos_ids, cache, write_pos, window):
+    """GQA with optional ring-buffer window cache (wattn decode)."""
+    from ..layers.attention import apply_gqa
+    if cache is not None and "kpos" in cache:
+        # ring buffer: write at pos % window, attend with explicit positions
+        dtype = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+        hd = q.shape[-1]
+        cos, sin = rope_cos_sin(pos_ids, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        slot = write_pos % window
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(
+            cache["kpos"], jnp.full((1,), write_pos, jnp.int32), (slot,))
+        out = flash_attention(q, ck.astype(dtype), cv.astype(dtype),
+                              causal=True, q_offset=write_pos, window=window,
+                              k_positions=kpos, chunk=min(1024, window))
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+        return shard(y, "act_batch", "act_seq", "act_embed"), {
+            "k": ck, "v": cv, "kpos": kpos}
+    return apply_gqa(p, x, cfg, pos_ids=pos_ids, cache=cache,
+                     write_pos=write_pos, window=window, causal=cfg.causal)
+
+
+def _apply_block(p, x, cfg, kind, *, pos_ids, cache, write_pos):
+    mixer, mlpk = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"])
+    if mixer in ("gqa", "wattn"):
+        window = cfg.window if mixer == "wattn" else 0
+        y, new_cache = _apply_gqa_block(p["mixer"], h, cfg, pos_ids=pos_ids,
+                                        cache=cache, write_pos=write_pos,
+                                        window=window)
+    elif mixer == "mla":
+        y, new_cache = apply_mla(p["mixer"], h, cfg, pos_ids=pos_ids,
+                                 cache=cache, write_pos=write_pos)
+    elif mixer == "rwkv":
+        y, st = apply_rwkv_time(p["mixer"], h, cfg, state=(
+            None if cache is None else cache["time"]))
+        new_cache = None if cache is None else {**cache, "time": st}
+    elif mixer == "rglru":
+        y, st = apply_rglru(p["mixer"], h, cfg, state=cache)
+        new_cache = st
+    else:
+        raise ValueError(mixer)
+
+    if cfg.parallel_block:
+        m = apply_mlp(p["mlp"], h, cfg.act)
+        return x + y + m, new_cache, aux
+
+    x = x + y
+    h2 = rms_norm(x, p["ln2"])
+    if mlpk == "mlp":
+        out = apply_mlp(p["mlp"], h2, cfg.act)
+    elif mlpk == "moe":
+        out, aux = apply_moe(p["mlp"], h2, cfg)
+    else:  # rwkv channel mix
+        out, st = apply_rwkv_channel(p["mlp"], h2, state=(
+            None if cache is None else {"shift": cache["channel_shift"]}))
+        if new_cache is not None:
+            new_cache = {**new_cache, "channel_shift": st["shift"]}
+    return x + out, new_cache, aux
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+class Model:
+    """Functional model wrapper bound to an ArchConfig."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.segments = build_segments(cfg)
+
+    # -- init ------------------------------------------------------------
+    def init(self, key=None, *, abstract: bool = False):
+        return init_params(self.cfg, key, abstract=abstract)
+
+    # -- shared forward over segments -------------------------------------
+    def _run_segments(self, params, x, *, pos_ids, cache, write_pos):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: dict[str, Any] | None = None if cache is None else {}
+        for si, seg in enumerate(self.segments):
+            sp = params[f"seg{si}"]
+            sc = None if cache is None else cache[f"seg{si}"]
+
+            def body(carry, inp, _seg=seg):
+                xx, aux = carry
+                p_i, c_i = inp
+                nc_i = {}
+                for bi, kind in enumerate(_seg.pattern):
+                    cb = None if c_i is None else c_i.get(f"blk{bi}")
+                    xx, ncb, a = _apply_block(
+                        p_i[f"blk{bi}"], xx, cfg, kind, pos_ids=pos_ids,
+                        cache=cb, write_pos=write_pos)
+                    if ncb is not None:
+                        nc_i[f"blk{bi}"] = ncb
+                    aux = aux + a
+                return (xx, aux), (nc_i if nc_i else None)
+
+            body = _remat(body, cfg.remat)
+            if seg.repeats == 1:
+                p_i = jax.tree.map(lambda a: a[0], sp)
+                c_i = (None if sc is None else
+                       jax.tree.map(lambda a: a[0], sc))
+                (x, aux_total), nc = body((x, aux_total), (p_i, c_i))
+                if cache is not None:
+                    new_cache[f"seg{si}"] = jax.tree.map(
+                        lambda a: a[None], nc)
+            else:
+                (x, aux_total), nc = jax.lax.scan(
+                    body, (x, aux_total), (sp, sc), unroll=scan_unroll())
+                if cache is not None:
+                    new_cache[f"seg{si}"] = nc
+        return x, new_cache, aux_total
+
+    # -- train / prefill forward ------------------------------------------
+    def forward(self, params, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (final hidden [B,S,d] in cfg.dtype, aux loss)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.frontend == "frames":
+            x = batch["frames"].astype(dtype)
+            x = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dtype))
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0
+                         ).astype(dtype)
+            if "patch_embeds" in batch:
+                # VLM frontend stub (assignment): precomputed vision patch
+                # embeddings replace the first P positions' token embeddings
+                # (M-RoPE ids stay text-mode; the vision tower is out of
+                # scope per the brief).
+                pe = batch["patch_embeds"].astype(dtype)
+                x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        x = shard(x, "act_batch", "act_seq", "act_embed")
+        b, s = x.shape[:2]
+        pos_ids = _pos_ids(cfg, b, s, 0)
+        x, _, aux = self._run_segments(params, x, pos_ids=pos_ids,
+                                       cache=None, write_pos=None)
+        x = rms_norm(x, params["final_norm"])
+        return x, aux
+
+    def logits(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        out = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+        return shard(out, "act_batch", "act_seq", "act_vocab")
+
+    # -- decode ------------------------------------------------------------
+    def serve_step(self, params, cache, tokens: jnp.ndarray, pos
+                   ) -> tuple[jnp.ndarray, dict]:
+        """One decode step: tokens [B,1] -> (logits [B,V], new cache)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        b = x.shape[0]
+        pos_ids = _pos_ids(cfg, b, 1, pos)
+        x, new_cache, _ = self._run_segments(params, x, pos_ids=pos_ids,
+                                             cache=cache, write_pos=pos)
+        x = rms_norm(x, params["final_norm"])
+        return self.logits(params, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------- cache ----
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, *,
+               abstract: bool = False) -> dict:
+    """Decode cache pytree (stacked leading dim = segment repeats)."""
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    def mk(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    cache: dict[str, Any] = {}
+    for si, seg in enumerate(build_segments(cfg)):
+        n = seg.repeats
+        entry: dict[str, Any] = {}
+        for bi, (mixer, mlpk) in enumerate(seg.pattern):
+            e: dict[str, Any] = {}
+            if mixer == "gqa":
+                kvh = (cfg.kv_replicate_to
+                       if cfg.kv_replicate_to > cfg.n_kv_heads
+                       and cfg.kv_replicate_to % cfg.n_kv_heads == 0
+                       else cfg.n_kv_heads)
+                e = {"k": mk((n, batch, max_seq, kvh, hd), dtype),
+                     "v": mk((n, batch, max_seq, kvh, hd), dtype)}
+            elif mixer == "wattn":
+                w = cfg.window
+                e = {"k": mk((n, batch, w, cfg.n_kv_heads, hd), dtype),
+                     "v": mk((n, batch, w, cfg.n_kv_heads, hd), dtype),
+                     "kpos": (jax.ShapeDtypeStruct((n, w), jnp.int32)
+                              if abstract else
+                              jnp.full((n, w), -10**9, jnp.int32))}
+            elif mixer == "mla":
+                e = {"c": mk((n, batch, max_seq, cfg.kv_lora), dtype),
+                     "k_rope": mk((n, batch, max_seq, cfg.rope_head_dim),
+                                  dtype)}
+            elif mixer == "rwkv":
+                h = cfg.d_model // cfg.rwkv_head_size
+                e = {"time": {
+                        "shift": mk((n, batch, cfg.d_model), jnp.float32),
+                        "wkv": mk((n, batch, h, cfg.rwkv_head_size,
+                                   cfg.rwkv_head_size), jnp.float32)}}
+            elif mixer == "rglru":
+                e = {"conv": mk((n, batch, cfg.conv_width - 1, cfg.rnn_width),
+                                jnp.float32),
+                     "h": mk((n, batch, cfg.rnn_width), jnp.float32)}
+            if mlpk == "rwkv_cm":
+                e["channel_shift"] = mk((n, batch, cfg.d_model), jnp.float32)
+            entry[f"blk{bi}"] = e
+        cache[f"seg{si}"] = entry
+    return cache

@@ -1,0 +1,135 @@
+"""Train / serve step functions (the units the dry-run lowers).
+
+The LM loss streams the vocab projection in sequence chunks under
+jax.checkpoint, so the [B, S, V] logits tensor is never materialised — with
+256k vocabs at 4k x 256 batch that tensor alone would be ~0.5 TB; chunking
+turns it into a [B, chunk, V] transient recomputed in the backward pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import adamw_init, adamw_update
+from ..utils.flags import scan_unroll
+from .lm import Model
+
+AUX_COEF = 0.001
+
+
+def chunked_ce_loss(model: Model, params, x: jnp.ndarray, labels: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Mean CE over labels >= 0; x [B,S,d] final hidden, labels [B,S]."""
+    cfg = model.cfg
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    head = head.astype(x.dtype)
+    b, s, d = x.shape
+    c = min(cfg.logits_chunk, s)
+    nc = s // c
+    assert s % c == 0
+    xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        loss_sum, cnt = carry
+        xx, yy = inp
+        logits = jnp.einsum("bcd,dv->bcv", xx, head,
+                            preferred_element_type=jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(yy, 0)[..., None], axis=-1)[..., 0]
+        mask = (yy >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - ll) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (loss_sum, cnt), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, yc), unroll=scan_unroll())
+    return loss_sum / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(model: Model, params, batch: dict) -> jnp.ndarray:
+    x, aux = model.forward(params, batch)
+    ce = chunked_ce_loss(model, params, x, batch["labels"])
+    return ce + AUX_COEF * aux
+
+
+def make_train_step(model: Model, lr=3e-4):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    cfg.grad_accum > 1 scans over microbatches accumulating f32 grads —
+    peak activation memory scales with B/grad_accum while tokens/step and
+    numerics (up to summation order) are unchanged. This is the memory-
+    roofline lever for the big train cells (EXPERIMENTS.md §Perf)."""
+    accum = model.cfg.grad_accum
+
+    def loss_and_grad(params, batch):
+        return jax.value_and_grad(
+            functools.partial(loss_fn, model))(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = loss_and_grad(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(accum, a.shape[0] // accum, *a.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                loss_sum, g_acc = carry
+                loss, g = loss_and_grad(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_sum + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro,
+                unroll=scan_unroll())
+            loss = loss_sum / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return loss_fn(model, params, batch)
+    return eval_step
+
+
+def make_prefill_step(model: Model):
+    """Forward returning last-position logits (the prefill_32k unit)."""
+
+    def prefill_step(params, batch):
+        x, _ = model.forward(params, batch)
+        return model.logits(params, x[:, -1:])[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """(params, cache, tokens [B,1], pos) -> (next token logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.serve_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def init_train_state(model: Model, key=None, *, abstract: bool = False
+                     ) -> tuple[Any, Any, dict[str, tuple[str, ...]]]:
+    params, axes = model.init(key, abstract=abstract)
+    if abstract:
+        opt = jax.eval_shape(adamw_init, params)
+    else:
+        opt = adamw_init(params)
+    return params, opt, axes

@@ -1,0 +1,52 @@
+"""Error-feedback gradient compression (distributed-optimization trick).
+
+Top-k magnitude sparsification with an error-feedback residual accumulator
+(Karimireddy et al. 2019 semantics): compress(g + e) is applied, the
+residual e keeps what was dropped, so the scheme is unbiased in the limit
+and converges at full-gradient rate. Opt-in: at 1000+ node scale DP gradient
+all-reduces of f32 grads dominate the interconnect; top-k at 1-10% density
+cuts that bytes term ~10-100x (the §Perf collective lever for DP-bound
+cells). Tested for convergence parity on the small train example."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any
+
+
+def compress_init(params: Any) -> CompressState:
+    return CompressState(residual=jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+
+def _topk_mask(x: jnp.ndarray, density: float) -> jnp.ndarray:
+    k = max(int(x.size * density), 1)
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_grads(grads: Any, state: CompressState, *, density: float = 0.05
+                   ) -> tuple[Any, CompressState, dict]:
+    """-> (sparse grads to all-reduce, new residual state, stats)."""
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        mask = _topk_mask(acc, density)
+        sent = acc * mask
+        return sent, acc - sent
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    stats = {"density": density,
+             "sent_elems": int(total * density),
+             "total_elems": int(total)}
+    return sent, CompressState(residual=resid), stats

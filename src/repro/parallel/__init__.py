@@ -1,0 +1,5 @@
+from .sharding import (LOGICAL_RULES, ParamCollector, logical_sharding,
+                       logical_spec, set_mesh_rules, shard)
+
+__all__ = ["LOGICAL_RULES", "ParamCollector", "logical_sharding",
+           "logical_spec", "set_mesh_rules", "shard"]

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) — MaxText-style.
+
+Every parameter/activation dimension carries a *logical* axis name; a rules
+table maps logical names to mesh axis names. The resolver drops a mesh axis
+when the dimension is not divisible by it (e.g. hubert's vocab=504 or
+qwen2-vl's 12 heads on a 16-way model axis stay replicated — GSPMD then
+chooses the collectives, and the roofline table shows the cost, which is the
+honest signal).
+
+Scaling posture: the rules are axis-NAME based, so the same model code runs
+on (data, model), (pod, data, model), or any larger mesh — elastic rescaling
+is a mesh-constructor change, not a model change.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (in priority order; "pod" composes with
+# "data" for the batch/FSDP dimension on multi-pod meshes)
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": (),                  # SP rule: set to ("model",) for long ctx
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+    "act_kv_seq": ("model",),       # context-parallel KV caches (decode)
+    # parameters
+    "embed": (),                    # FSDP rule: becomes ("pod", "data")
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_mlp": (),
+    "kv_lora": (),
+    "q_lora": (),
+    "rnn": ("model",),
+    "conv": (),
+    "norm": (),
+    "lora": (),
+}
+
+_state = threading.local()
+
+
+def set_mesh_rules(mesh: Mesh | None, overrides: dict[str, tuple[str, ...]]
+                   | None = None):
+    """Install the active mesh + rule overrides (context manager)."""
+    rules = dict(LOGICAL_RULES)
+    if overrides:
+        rules.update(overrides)
+
+    @contextlib.contextmanager
+    def ctx():
+        prev = getattr(_state, "cfg", None)
+        _state.cfg = (mesh, rules)
+        try:
+            yield
+        finally:
+            _state.cfg = prev
+    return ctx()
+
+
+def fsdp_rules(multi_pod: bool) -> dict[str, tuple[str, ...]]:
+    """ZeRO-3-style: shard every weight's embed dim over the batch axes."""
+    return {"embed": ("pod", "data") if multi_pod else ("data",)}
+
+
+def _current() -> tuple[Mesh | None, dict[str, tuple[str, ...]]]:
+    cfg = getattr(_state, "cfg", None)
+    return cfg if cfg is not None else (None, LOGICAL_RULES)
+
+
+def logical_spec(axes: Sequence[str | None], shape: Sequence[int] | None,
+                 mesh: Mesh | None = None,
+                 rules: dict[str, tuple[str, ...]] | None = None) -> P:
+    """PartitionSpec from logical axis names, with divisibility fallback."""
+    if mesh is None or rules is None:
+        cm, cr = _current()
+        mesh = mesh or cm
+        rules = rules or cr
+    if mesh is None:
+        return P()
+    used: set[str] = set()
+    parts = []
+    for i, ax in enumerate(axes):
+        entry: tuple[str, ...] = rules.get(ax, ()) if ax else ()
+        picked = []
+        size = shape[i] if shape is not None else None
+        cap = 1
+        for m in entry:
+            if m not in mesh.axis_names or m in used:
+                continue
+            n = mesh.shape[m]
+            if size is not None and (size % (cap * n)) != 0:
+                continue
+            picked.append(m)
+            used.add(m)
+            cap *= n
+        parts.append(tuple(picked) if len(picked) > 1 else
+                     (picked[0] if picked else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_sharding(axes: Sequence[str | None], shape: Sequence[int],
+                     mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None
+                     ) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(axes, shape, mesh, rules))
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain an activation to its logical sharding (no-op without mesh)."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    spec = logical_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class ParamCollector:
+    """Builds a params pytree while recording each leaf's logical axes.
+
+    ``col.param("wq", (d, h, hd), ("embed", "heads", "head_dim"), key)``
+    returns an initialised array (or ShapeDtypeStruct in abstract mode) and
+    records the axes under the current scope path, so dry-runs can derive
+    NamedShardings for the whole tree without a second specification.
+    """
+
+    def __init__(self, *, param_dtype=jnp.float32, abstract: bool = False,
+                 init_scale: float = 0.02):
+        self.param_dtype = param_dtype
+        self.abstract = abstract
+        self.init_scale = init_scale
+        self.axes: dict[str, tuple[str, ...]] = {}
+        self._scope: list[str] = []
+        self._counter = 0
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._scope.append(name)
+        try:
+            yield
+        finally:
+            self._scope.pop()
+
+    def _path(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    def param(self, name: str, shape: tuple[int, ...],
+              axes: tuple[str | None, ...], key: jax.Array | None = None,
+              init: str = "normal") -> Any:
+        assert len(shape) == len(axes), (name, shape, axes)
+        self.axes[self._path(name)] = axes
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.param_dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, self.param_dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.param_dtype)
+        self._counter += 1
+        k = jax.random.fold_in(key, self._counter)
+        scale = self.init_scale
+        if init == "scaled":  # fan-in scaled
+            scale = 1.0 / np.sqrt(max(shape[0], 1))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(
+            self.param_dtype)
+
+
+def tree_shardings(params: Any, axes: dict[str, tuple[str, ...]], mesh: Mesh,
+                   rules: dict[str, tuple[str, ...]] | None = None) -> Any:
+    """NamedSharding tree matching ``params`` via recorded logical axes."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        spath = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        ax = axes.get(spath)
+        if ax is None:
+            out.append(NamedSharding(mesh, P()))
+        else:
+            out.append(logical_sharding(ax, leaf.shape, mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, [s for s in out])

@@ -1,0 +1,4 @@
+from .engine import ServeEngine
+from .kv_cache import PagedKVStore, PageTable
+
+__all__ = ["PagedKVStore", "PageTable", "ServeEngine"]

@@ -1,0 +1,139 @@
+"""Batched serving engine: continuous batching over Model.serve_step.
+
+Small-scale but structurally real: fixed decode slots, per-slot sequence
+state, greedy sampling, EOS/max-len retirement, and PLEX-paged swap-out of
+finished sequences' KV (so a follow-up request with the same seq_id can
+resume without re-prefill). Prefill reuses the decode step token-by-token —
+fine at example scale; the prefill_32k dry-run cells cover the batched
+prefill path."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import Model, init_cache
+from .kv_cache import PagedKVStore
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray
+    max_new: int = 32
+    eos: int = -1
+
+
+@dataclasses.dataclass
+class Finished:
+    seq_id: int
+    tokens: np.ndarray
+    swapped_pages: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 max_seq: int = 256, page_tokens: int = 16,
+                 pool_pages: int = 4096):
+        self.model = model
+        self.params = params
+        self.b = batch_size
+        self.max_seq = max_seq
+        self.cache = init_cache(model.cfg, batch_size, max_seq)
+        self.kv_store = PagedKVStore(page_tokens=page_tokens,
+                                     n_pages=pool_pages)
+        self._step = jax.jit(model.serve_step)
+        self.slots: list[dict | None] = [None] * batch_size
+        self.queue: list[Request] = []
+        self.finished: list[Finished] = []
+        self.steps = 0
+
+    # -- public -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Finished]:
+        while (any(self.slots) or self.queue) and max_steps:
+            self.step()
+            max_steps -= 1
+        return self.finished
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self) -> None:
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = {"req": req, "pos": 0,
+                                 "out": [], "done_prefill": False}
+
+    def step(self) -> None:
+        self._admit()
+        if not any(self.slots):
+            return
+        # one token per active slot: either next prompt token (prefill) or
+        # the previously sampled token (decode)
+        toks = np.zeros((self.b, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req = s["req"]
+            if s["pos"] < len(req.prompt):
+                toks[i, 0] = req.prompt[s["pos"]]
+            else:
+                toks[i, 0] = s["out"][-1] if s["out"] else 0
+        # all slots share a step index per slot; serve_step takes one pos —
+        # run per distinct position group (slots usually align in steady
+        # state; correctness first at example scale)
+        groups: dict[int, list[int]] = {}
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                groups.setdefault(s["pos"], []).append(i)
+        for pos, idxs in sorted(groups.items()):
+            logits, self.cache = self._step(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.int32(pos))
+            lg = np.asarray(logits, np.float32)
+            for i in idxs:
+                s = self.slots[i]
+                req = s["req"]
+                s["pos"] += 1
+                if s["pos"] >= len(req.prompt):      # decoding region
+                    nxt = int(np.argmax(lg[i]))
+                    s["out"].append(nxt)
+                    if (len(s["out"]) >= req.max_new
+                            or nxt == req.eos
+                            or s["pos"] >= self.max_seq - 1):
+                        self._retire(i)
+        self.steps += 1
+
+    def _retire(self, slot: int) -> None:
+        s = self.slots[slot]
+        req = s["req"]
+        # swap this sequence's KV out through the PLEX-paged store
+        pages = 0
+        kv = self._slot_kv(slot, s["pos"])
+        if kv is not None:
+            pages = self.kv_store.store(req.seq_id, kv)
+        self.finished.append(Finished(seq_id=req.seq_id,
+                                      tokens=np.asarray(s["out"], np.int32),
+                                      swapped_pages=pages))
+        self.slots[slot] = None
+
+    def _slot_kv(self, slot: int, n_tokens: int) -> np.ndarray | None:
+        """Concatenate this slot's per-layer KV [T, ...] for swap-out."""
+        seg0 = self.cache.get("seg0")
+        if not seg0:
+            return None
+        blk = seg0["blk0"]
+        if "k" in blk:
+            k = np.asarray(blk["k"][:, slot, :n_tokens], np.float32)
+            v = np.asarray(blk["v"][:, slot, :n_tokens], np.float32)
+            return np.concatenate([k, v], axis=-1).transpose(1, 0, 2, 3
+                                                             ).reshape(
+                n_tokens, -1)
+        if "c" in blk:
+            c = np.asarray(blk["c"][:, slot, :n_tokens], np.float32)
+            return c.transpose(1, 0, 2).reshape(n_tokens, -1)
+        return None

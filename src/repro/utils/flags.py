@@ -1,0 +1,28 @@
+"""Trace-time flags.
+
+``unrolled_scans()``: within this context every lax.scan in the model stack
+unrolls. Used by the dry-run's HLO-cost probes — XLA's HloCostAnalysis counts
+a while-loop body ONCE regardless of trip count, so FLOP/byte/collective
+totals from scanned programs under-count by the trip count; the probes
+compile small-depth unrolled variants and extrapolate (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def scan_unroll() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled_scans(on: bool = True):
+    prev = scan_unroll()
+    _state.unroll = on
+    try:
+        yield
+    finally:
+        _state.unroll = prev

@@ -1,0 +1,20 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.
+import numpy as np
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def sorted_u64(rng, n, *, dups=False, spread=62):
+    keys = rng.integers(0, 1 << spread, n, dtype=np.uint64)
+    if dups:
+        keys[rng.integers(0, n, n // 8)] = keys[rng.integers(0, n, n // 8)]
+    return np.sort(keys)

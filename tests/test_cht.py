@@ -1,0 +1,69 @@
+"""CHT: delta bound, exact agreement with the Algorithm-1 cost model."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import adjacent_lcp, build_cht, cht_cost_model
+from repro.core.autotune import ceil_log2
+from repro.core.cht import bit_length_u64
+
+
+def unique_sorted(raw):
+    return np.unique(np.asarray(raw, dtype=np.uint64))
+
+
+keysets = st.one_of(
+    st.lists(st.integers(0, 2**64 - 1), min_size=4, max_size=300,
+             unique=True),
+    st.lists(st.integers(0, 2**20), min_size=4, max_size=300, unique=True),
+    st.lists(st.integers(2**55, 2**55 + 2**18), min_size=4, max_size=300,
+             unique=True),
+)
+
+
+def test_bit_length_exact():
+    xs = np.array([0, 1, 2, 3, 255, 256, 2**31, 2**63, 2**64 - 1],
+                  dtype=np.uint64)
+    want = np.array([int(x).bit_length() for x in xs])
+    assert np.array_equal(bit_length_u64(xs), want)
+
+
+@given(keysets, st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 3, 8, 64]))
+def test_delta_bound(raw, r, delta):
+    keys = unique_sorted(raw)
+    cht = build_cht(keys, r, delta)
+    qt = cht.lookup(keys)
+    true = np.arange(keys.size)
+    assert np.all(qt <= true), "q~ must lower-bound the true index"
+    assert np.all(true <= qt + delta), "true index must be within delta"
+
+
+@given(keysets, st.sampled_from([1, 2, 5]), st.sampled_from([1, 2, 7, 33]))
+def test_cost_model_exact(raw, r, delta):
+    """Algorithm 1 == brute-force walk of the built tree (depth & nodes)."""
+    keys = unique_sorted(raw)
+    lam, nodes, byts = cht_cost_model(keys, r_max=r, delta_max=64)
+    cht = build_cht(keys, r, delta)
+    model = lam[r, delta]
+    actual = (float(ceil_log2(np.array([delta + 1]))[0])
+              + cht.depths(keys).mean())
+    assert abs(model - actual) < 1e-9
+    assert nodes[r, delta] == cht.n_nodes
+    assert byts[r, delta] == cht.size_bytes
+
+
+@given(keysets)
+def test_lcp_histogram(raw):
+    keys = unique_sorted(raw)
+    lcp = adjacent_lcp(keys)
+    for i in range(1, min(keys.size, 40)):
+        x = int(keys[i - 1]) ^ int(keys[i])
+        assert lcp[i - 1] == 64 - x.bit_length()
+
+
+def test_deep_chain_terminates():
+    # adjacent keys sharing 60-bit prefixes force long descent chains
+    base = np.uint64(2**63)
+    keys = base + np.arange(16, dtype=np.uint64)
+    cht = build_cht(keys, r=1, delta=1)
+    qt = cht.lookup(keys)
+    assert np.all((np.arange(16) - qt >= 0) & (np.arange(16) - qt <= 1))

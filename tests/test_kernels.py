@@ -1,0 +1,196 @@
+"""Pallas kernels vs ref.py oracle + numpy core: shape/dtype sweeps in
+interpret mode (the per-kernel contract)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import build_plex
+from repro.core.plex import PLEX, BuildStats
+from repro.core.spline import build_spline
+from repro.core.cht import build_cht
+from repro.core.radix_table import build_radix_table
+from repro.data import generate
+from repro.kernels import DevicePlex
+from repro.kernels.bounded_search import bounded_search
+from repro.kernels.pairs import (extract_bits, join_u64, pair_le, pair_lt,
+                                 pair_shl, pair_shr, pair_sub, split_u64)
+from repro.kernels.ref import lower_bound_ref, segment_ref, window_base_ref
+
+
+# ----------------------------------------------------------- pairs.py ----
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64),
+       st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64))
+def test_pair_compare_property(a_raw, b_raw):
+    n = min(len(a_raw), len(b_raw))
+    a = np.asarray(a_raw[:n], np.uint64)
+    b = np.asarray(b_raw[:n], np.uint64)
+    ah, al = map(jnp.asarray, split_u64(a))
+    bh, bl = map(jnp.asarray, split_u64(b))
+    assert np.array_equal(np.asarray(pair_le(ah, al, bh, bl)), a <= b)
+    assert np.array_equal(np.asarray(pair_lt(ah, al, bh, bl)), a < b)
+    # subtraction (a >= b lanes only)
+    m = a >= b
+    if m.any():
+        dh, dl = pair_sub(ah, al, bh, bl)
+        diff = join_u64(np.asarray(dh), np.asarray(dl))
+        assert np.array_equal(diff[m], (a - b)[m])
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=32),
+       st.integers(0, 63))
+def test_pair_shifts(raw, s):
+    x = np.asarray(raw, np.uint64)
+    h, l = map(jnp.asarray, split_u64(x))
+    rh, rl = pair_shr(h, l, s)
+    assert np.array_equal(join_u64(np.asarray(rh), np.asarray(rl)),
+                          x >> np.uint64(s))
+    lh, ll = pair_shl(h, l, s)
+    assert np.array_equal(join_u64(np.asarray(lh), np.asarray(ll)),
+                          x << np.uint64(s))
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=32),
+       st.integers(0, 60), st.integers(1, 16))
+def test_extract_bits_matches_core(raw, offset, r):
+    from repro.core.cht import _extract_bins
+    x = np.asarray(raw, np.uint64)
+    h, l = map(jnp.asarray, split_u64(x))
+    got = np.asarray(extract_bits(h, l, offset, r))
+    want = _extract_bins(x, offset, r)
+    assert np.array_equal(got, want)
+
+
+# ------------------------------------------------- kernel shape sweeps ----
+
+@pytest.mark.parametrize("dataset", ["amzn", "face", "osm", "wiki"])
+@pytest.mark.parametrize("n,eps,block", [
+    (4_000, 4, 128), (40_000, 16, 512), (120_000, 64, 1024),
+])
+def test_device_lookup_sweep(dataset, n, eps, block, rng):
+    keys = generate(dataset, n)
+    px = build_plex(keys, eps=eps)
+    dp = DevicePlex.from_plex(px, block=block)
+    q = keys[rng.integers(0, keys.size, 3 * block + 17)]
+    got = dp.lookup(q)
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+
+
+def _force_layer(keys, eps, kind, rng):
+    """Build a PLEX with a specific layer kind for kernel-path coverage."""
+    spline = build_spline(keys, eps)
+    from repro.core import tune
+    tuning = tune(spline, keys)
+    layer = (build_radix_table(spline.keys, 8) if kind == "radix"
+             else build_cht(spline.keys, 4, 16))
+    return PLEX(spline=spline, layer=layer, tuning=tuning, keys=keys,
+                eps=eps, stats=BuildStats(0, 0, 0, 0))
+
+
+@pytest.mark.parametrize("kind", ["radix", "cht"])
+@pytest.mark.parametrize("mode", ["count", "bisect"])
+def test_both_layers_both_modes(kind, mode, rng):
+    keys = np.sort(rng.integers(0, 2**48, 30_000, dtype=np.uint64))
+    keys = np.unique(keys)
+    px = _force_layer(keys, 8, kind, rng)
+    dp = DevicePlex.from_plex(px)
+    dp.static["mode"] = mode
+    import functools, jax
+    from repro.kernels.ops import _lookup_pipeline
+    dp._fn = jax.jit(functools.partial(_lookup_pipeline, dp))
+    q = keys[rng.integers(0, keys.size, 2048)]
+    got = dp.lookup(q)
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+
+
+def test_segment_kernel_matches_oracle(rng):
+    keys = np.unique(np.sort(rng.integers(0, 2**60, 20_000, dtype=np.uint64)))
+    px = build_plex(keys, eps=8)
+    dp = DevicePlex.from_plex(px)
+    q = keys[rng.integers(0, keys.size, dp.block)]
+    qh, ql = map(jnp.asarray, split_u64(q))
+    want = np.asarray(window_base_ref(
+        qh, ql, dp.skhi, dp.sklo, dp.spos, eps_eff=dp.eps_eff,
+        n_data=dp.n_data, window=dp.window))
+    from repro.kernels.ops import _lookup_pipeline  # exercised via lookup
+    got_idx = dp.lookup(q)
+    # oracle base must contain the found index inside its window
+    assert np.all((got_idx >= want) & (got_idx <= want + dp.window))
+
+
+def test_bounded_search_kernel_oracle(rng):
+    n, w, b = 8_192, 128, 512
+    keys = np.sort(rng.integers(0, 2**40, n, dtype=np.uint64))
+    q = keys[rng.integers(0, n, b)]
+    want = np.searchsorted(keys, q, side="left")
+    base = np.clip(want - rng.integers(0, w // 2, b), 0, n - w).astype(np.int32)
+    kh, kl = split_u64(keys)
+    idx = base[:, None] + np.arange(w)
+    qh, ql = map(jnp.asarray, split_u64(q))
+    got = bounded_search(qh, ql, jnp.asarray(kh[idx]), jnp.asarray(kl[idx]),
+                         jnp.asarray(base))
+    assert np.array_equal(np.asarray(got), want)
+    # and the dense oracle agrees
+    lb = lower_bound_ref(qh, ql, jnp.asarray(kh), jnp.asarray(kl))
+    assert np.array_equal(np.asarray(lb), want)
+
+
+def test_float32_rank_plane_guard():
+    keys = np.arange(100, dtype=np.uint64)
+    px = build_plex(keys, eps=2)
+    px.spline.positions[-1] = 1 << 25      # fake huge rank
+    with pytest.raises(ValueError):
+        DevicePlex.from_plex(px)
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=8, max_size=2000,
+                unique=True),
+       st.sampled_from([2, 8, 64]))
+def test_device_lookup_hypothesis(raw, eps):
+    """Adversarial key patterns through the full device path."""
+    keys = np.sort(np.asarray(raw, dtype=np.uint64))
+    px = build_plex(keys, eps=eps)
+    dp = DevicePlex.from_plex(px, block=128)
+    got = dp.lookup(keys)
+    assert np.array_equal(got, np.arange(keys.size))
+
+
+def test_device_lookup_dense_cluster_plus_outliers(rng):
+    """The face-style pattern at kernel level: dense cluster + MSB outliers
+    (exercises CHT descent depth and pair-arithmetic carries)."""
+    dense = np.arange(50_000, dtype=np.uint64) * 3 + (1 << 30)
+    outl = (np.uint64(1) << np.uint64(63)) + \
+        rng.integers(0, 1 << 20, 64).astype(np.uint64)
+    keys = np.unique(np.concatenate([dense, outl]))
+    px = build_plex(keys, eps=8)
+    dp = DevicePlex.from_plex(px)
+    q = keys[rng.integers(0, keys.size, 4096)]
+    assert np.array_equal(dp.lookup(q), np.searchsorted(keys, q, "left"))
+
+
+# ------------------------------------------------ pallas flash attention ----
+
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+@pytest.mark.parametrize("b,s,h,kvh,d,causal", [
+    (2, 256, 4, 2, 64, True),
+    (1, 512, 8, 8, 32, True),
+    (2, 256, 4, 1, 128, False),
+    (1, 128, 2, 2, 16, True),
+])
+def test_pallas_flash_sweep(b, s, h, kvh, d, causal, dtype, rng):
+    """Pallas flash fwd vs the jnp online-softmax oracle, shape/dtype sweep."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.layers.attention import flash_attention
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), dt)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), dt)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), dt)
+    got = flash_attention_fwd(q, k, v, causal=causal, block_q=128,
+                              block_k=128)
+    ref = flash_attention(q, k, v, causal=causal, q_offset=0, chunk=128)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,204 @@
+"""Per-arch smoke tests + model-level property tests (reduced configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke, SHAPES
+from repro.configs.registry import shape_supported
+from repro.models import Model, init_cache
+from repro.models.steps import (init_train_state, make_serve_step,
+                                make_train_step)
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "frames":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train(arch, rng):
+    cfg = get_smoke(arch)
+    m = Model(cfg)
+    params, axes = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    x, aux = m.forward(params, batch)
+    assert x.shape == (B, S, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(x.astype(jnp.float32))))
+    params, opt, _ = init_train_state(m, jax.random.PRNGKey(1))
+    loss, params, opt = jax.jit(make_train_step(m))(params, opt, batch)
+    assert np.isfinite(float(loss))
+    # every param path got a logical-axes record
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    assert len(axes) == len(flat)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_smoke(a).causal])
+def test_decode_matches_forward(arch, rng):
+    """Token-by-token serve_step == batched forward logits (causal archs)."""
+    cfg = get_smoke(arch)
+    m = Model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)), jnp.int32)
+    x, _ = m.forward(params, {"tokens": toks})
+    full_logits = np.asarray(m.logits(params, x), np.float32)
+
+    cache = init_cache(cfg, B, 64)
+    step = jax.jit(make_serve_step(m))
+    got = []
+    for t in range(8):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        got.append(np.asarray(lg, np.float32))
+    got = np.stack(got, axis=1)
+    np.testing.assert_allclose(got, full_logits, rtol=0.15, atol=0.15)
+
+
+def test_rwkv_chunked_equals_sequential(rng):
+    """The chunked-parallel WKV == exact per-step recurrence."""
+    from repro.layers.rwkv import _wkv_chunked, wkv_step
+    b, s, h, d = 2, 48, 3, 8
+    r = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), jnp.float32)
+    logw = jnp.asarray(-np.abs(rng.normal(0.5, 0.5, (b, s, h, d))),
+                       jnp.float32)
+    logw = jnp.maximum(logw, -4.0)
+    u = jnp.asarray(rng.normal(0, 1, (h, d)), jnp.float32)
+    o_chunk, st_chunk = _wkv_chunked(r, k, v, logw, u)
+    st = jnp.zeros((b, h, d, d), jnp.float32)
+    outs = []
+    for t in range(s):
+        st, o = wkv_step(st, r[:, t], k[:, t], v[:, t], logw[:, t], u)
+        outs.append(o)
+    o_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_chunk), np.asarray(o_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_naive(rng):
+    from repro.layers.attention import flash_attention
+    b, s, h, d = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, 2, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, 2, d)), jnp.float32)
+    for causal, window in ((True, 0), (True, 8), (False, 0)):
+        out = flash_attention(q, k, v, causal=causal, q_offset=0,
+                              window=window, chunk=16)
+        # naive reference
+        kk = jnp.repeat(k, 2, axis=2)
+        vv = jnp.repeat(v, 2, axis=2)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * d ** -0.5
+        pos = np.arange(s)
+        mask = np.ones((s, s), bool)
+        if causal:
+            mask &= pos[:, None] >= pos[None, :]
+        if window:
+            mask &= (pos[:, None] - pos[None, :]) < window
+        scores = jnp.where(jnp.asarray(mask)[None, None], scores, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), vv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_moe_routes_and_balances(rng):
+    cfg = get_smoke("qwen2-moe-a2.7b")
+    from repro.layers.moe import apply_moe, init_moe, padded_experts
+    from repro.parallel import ParamCollector
+    col = ParamCollector()
+    p = init_moe(col, 1, cfg, jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda a: a[0], p)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, cfg.d_model)), jnp.bfloat16)
+    y, aux = apply_moe(p, x, cfg)
+    assert y.shape == x.shape and np.isfinite(float(aux))
+    assert padded_experts(60) == 64 and padded_experts(160) == 160
+
+
+def test_segments_cover_all_layers():
+    from repro.models.lm import build_segments
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        segs = build_segments(cfg)
+        total = sum(len(s.pattern) * s.repeats for s in segs)
+        assert total == cfg.n_layers, arch
+
+
+def test_shape_skip_matrix():
+    cells = [(a, s.name, shape_supported(get_config(a), s)[0])
+             for a in ARCH_IDS for s in SHAPES.values()]
+    assert len(cells) == 40
+    runnable = [c for c in cells if c[2]]
+    assert len(runnable) == 31          # DESIGN.md §7
+    # every skip is long-context-on-full-attention or decode-on-encoder
+    assert all(s in ("long_500k", "decode_32k")
+               for a, s, ok in cells if not ok)
+
+
+def test_decode_matches_forward_with_kv_replication(rng):
+    """§Perf B layout: KV heads replicated to the mesh divisor must not
+    change decode results (pure layout transform)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke("minitron-4b"), kv_replicate_to=4)
+    m = Model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)), jnp.int32)
+    x, _ = m.forward(params, {"tokens": toks})
+    full_logits = np.asarray(m.logits(params, x), np.float32)
+    cache = init_cache(cfg, B, 64)
+    assert cache["seg0"]["blk0"]["k"].shape[-2] == 4  # replicated 2 -> 4
+    step = jax.jit(make_serve_step(m))
+    got = []
+    for t in range(8):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        got.append(np.asarray(lg, np.float32))
+    np.testing.assert_allclose(np.stack(got, 1), full_logits,
+                               rtol=0.15, atol=0.15)
+
+
+def test_mla_absorbed_decode_matches_naive(rng):
+    """§Perf D: weight-absorbed MLA decode == naive MLA decode == forward."""
+    import dataclasses
+    base = get_smoke("deepseek-v2-236b")
+    toks = jnp.asarray(rng.integers(0, base.vocab, (B, 8)), jnp.int32)
+    outs = {}
+    for absorb in (False, True):
+        cfg = dataclasses.replace(base, mla_absorb=absorb)
+        m = Model(cfg)
+        params, _ = m.init(jax.random.PRNGKey(0))
+        cache = init_cache(cfg, B, 64)
+        step = jax.jit(make_serve_step(m))
+        got = []
+        for t in range(8):
+            lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+            got.append(np.asarray(lg, np.float32))
+        outs[absorb] = np.stack(got, 1)
+    np.testing.assert_allclose(outs[True], outs[False], rtol=0.05, atol=0.05)
+
+
+def test_griffin_ring_buffer_wraparound(rng):
+    """Decode past the sliding window must match the windowed forward —
+    exercises ring-buffer slot reuse and explicit k-position masking."""
+    cfg = get_smoke("recurrentgemma-9b")          # window = 16
+    m = Model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    T = 3 * cfg.window // 2                       # crosses the wrap point
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    x, _ = m.forward(params, {"tokens": toks})
+    full_logits = np.asarray(m.logits(params, x), np.float32)
+    cache = init_cache(cfg, B, T + 8)
+    step = jax.jit(make_serve_step(m))
+    got = []
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        got.append(np.asarray(lg, np.float32))
+    np.testing.assert_allclose(np.stack(got, 1), full_logits,
+                               rtol=0.15, atol=0.15)

@@ -1,0 +1,39 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def test_adamw_minimises_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 2.0, -1.0])))
+
+    loss0 = float(loss_fn(params))
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, opt = adamw_update(g, opt, params, lr=0.05,
+                                   weight_decay=0.0)
+    assert float(loss_fn(params)) < 1e-2 * loss0
+    assert int(opt.step) == 300
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    p2, _ = adamw_update(huge, opt, params, lr=1.0, weight_decay=0.0,
+                         clip_norm=1.0)
+    assert np.all(np.abs(np.asarray(p2["w"])) < 10.0)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    xs = [float(lr(jnp.asarray(s))) for s in (0, 5, 10, 50, 100, 200)]
+    assert xs[0] == 0.0 and abs(xs[2] - 1e-3) < 1e-9
+    assert xs[3] < xs[2] and xs[4] <= xs[3]
+    assert xs[5] >= 1e-4 * 0.99            # floor

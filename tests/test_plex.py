@@ -1,0 +1,84 @@
+"""End-to-end PLEX + baselines: lookup == np.searchsorted (positive keys)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import build_plex
+from repro.core.baselines import (BinarySearch, BTree, CHTIndex, PGMIndex,
+                                  RMI, RadixSpline)
+from repro.core.baselines.bsearch import build_binary_search
+from repro.core.baselines.btree import build_btree
+from repro.core.baselines.cht_index import (DuplicateKeysError,
+                                            build_cht_index)
+from repro.core.baselines.pgm import build_pgm
+from repro.core.baselines.radixspline import build_radixspline
+from repro.core.baselines.rmi import build_rmi
+from repro.data import generate
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=4, max_size=500),
+       st.sampled_from([1, 4, 32]))
+def test_plex_lookup_property(raw, eps):
+    keys = np.sort(np.asarray(raw, dtype=np.uint64))
+    px = build_plex(keys, eps=eps)
+    got = px.lookup(keys)
+    assert np.array_equal(got, np.searchsorted(keys, keys, side="left"))
+
+
+@given(st.lists(st.integers(0, 2**40), min_size=4, max_size=300))
+def test_plex_handles_duplicates(raw):
+    raw = raw + raw[: len(raw) // 2]            # force duplicates
+    keys = np.sort(np.asarray(raw, dtype=np.uint64))
+    px = build_plex(keys, eps=4)
+    got = px.lookup(keys)
+    # first-occurrence semantics, exactly the wiki case (paper §4)
+    assert np.array_equal(got, np.searchsorted(keys, keys, side="left"))
+
+
+def test_all_indexes_on_datasets(rng):
+    for name in ("amzn", "face", "osm", "wiki"):
+        keys = generate(name, 50_000)
+        q = keys[rng.integers(0, keys.size, 10_000)]
+        want = np.searchsorted(keys, q, side="left")
+        builders = [
+            lambda k: build_plex(k, eps=16),
+            lambda k: build_radixspline(k, eps=16),
+            lambda k: build_pgm(k, eps=16),
+            lambda k: build_rmi(k, n_models=2048),
+            lambda k: build_btree(k),
+            build_binary_search,
+        ]
+        for b in builders:
+            idx = b(keys)
+            assert np.array_equal(idx.lookup(q), want), (name, idx.name)
+
+
+def test_cht_index_rejects_duplicates():
+    wiki = generate("wiki", 30_000)
+    assert np.any(wiki[1:] == wiki[:-1]), "wiki synthetic must have dups"
+    with pytest.raises(DuplicateKeysError):
+        build_cht_index(wiki)
+    # ...but PLEX handles the same keys (paper §4 Build Time)
+    px = build_plex(wiki, eps=8)
+    assert np.array_equal(px.lookup(wiki),
+                          np.searchsorted(wiki, wiki, side="left"))
+
+
+def test_absent_keys_lower_bound(rng):
+    keys = np.sort(rng.integers(0, 2**50, 40_000, dtype=np.uint64))
+    q = rng.integers(keys[0], keys[-1], 10_000, dtype=np.uint64)
+    px = build_plex(keys, eps=16)
+    got = px.lookup(q)
+    want = np.searchsorted(keys, q, side="left")
+    # in-window absent keys resolve exactly; the contract is positive
+    # lookups (paper §3), so allow the eps-window edge for absent ones
+    ok = got == want
+    assert ok.mean() > 0.999
+    assert np.all(np.abs(got - want) <= 2 * px.eps + 2)
+
+
+def test_size_accounting():
+    keys = generate("amzn", 40_000)
+    px = build_plex(keys, eps=16)
+    assert px.size_bytes == px.spline.size_bytes + px.layer.size_bytes
+    assert px.stats.total_s > 0

@@ -1,0 +1,62 @@
+"""Property tests: the paper's eps invariant |p~ - p*| <= eps (§2)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.spline import (_greedy_indices, _unique_first, build_spline,
+                               reference_spline_indices)
+from repro.data import generate
+
+
+def _check_eps(keys, eps):
+    sp = build_spline(keys, eps)
+    uk, up = _unique_first(keys)
+    pred = sp.predict(keys)
+    true = up[np.searchsorted(uk, keys)]
+    err = np.abs(pred - true.astype(np.float64))
+    assert err.max() <= eps + 1e-9, err.max()
+    # spline keys are a subset of data keys; endpoints included
+    assert sp.keys[0] == keys[0] and sp.keys[-1] == keys[-1]
+    assert np.all(np.isin(sp.keys, keys))
+
+
+keysets = st.one_of(
+    st.lists(st.integers(0, 2**64 - 1), min_size=3, max_size=400),
+    st.lists(st.integers(0, 2**16), min_size=3, max_size=400),   # dup-heavy
+    st.lists(st.integers(2**62, 2**62 + 10_000), min_size=3, max_size=400),
+)
+
+
+@given(keysets, st.sampled_from([1, 2, 8, 64]))
+def test_eps_bound_property(raw, eps):
+    keys = np.sort(np.asarray(raw, dtype=np.uint64))
+    _check_eps(keys, eps)
+
+
+@given(keysets, st.sampled_from([2, 16, 128]))
+def test_greedy_matches_reference(raw, eps):
+    keys = np.sort(np.asarray(raw, dtype=np.uint64))
+    uk, up = _unique_first(keys)
+    got = _greedy_indices(uk, up, float(eps))
+    want = reference_spline_indices(uk, up, float(eps))
+    assert np.array_equal(got, want)
+
+
+def test_eps_bound_on_sosd_datasets():
+    for name in ("amzn", "face", "osm", "wiki"):
+        for eps in (4, 32, 256):
+            _check_eps(generate(name, 60_000), eps)
+
+
+def test_spline_shrinks_with_eps():
+    keys = generate("osm", 60_000)
+    sizes = [build_spline(keys, e).keys.size for e in (2, 8, 32, 128)]
+    assert sizes == sorted(sizes, reverse=True)
+    assert sizes[-1] < sizes[0]
+
+
+def test_adversarial_wide_gaps():
+    # huge dx within one segment (the float-precision corner the repair
+    # pass exists for)
+    keys = np.sort(np.array([0, 1, 2, 3, 2**63, 2**63 + 1, 2**64 - 1],
+                            dtype=np.uint64))
+    _check_eps(keys, 1)

@@ -1,0 +1,188 @@
+"""Data pipeline, checkpointing, paged KV, compression, sharding logic."""
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint.store import StoreReader
+from repro.data import generate
+from repro.data.packing import PackedPipeline, SyntheticCorpus
+from repro.optim.compress import compress_grads, compress_init
+from repro.serving.kv_cache import PagedKVStore, PageTable, page_key
+
+
+# ----------------------------------------------------------- datasets ----
+
+def test_sosd_generators():
+    for name in ("amzn", "face", "osm", "wiki"):
+        k = generate(name, 20_000)
+        assert k.dtype == np.uint64 and np.all(k[1:] >= k[:-1])
+        assert np.array_equal(k, generate(name, 20_000))   # deterministic
+    assert np.any(generate("wiki", 20_000)[1:]
+                  == generate("wiki", 20_000)[:-1])        # dups by design
+
+
+# ------------------------------------------------------------ packing ----
+
+def test_packing_locate_exact(rng):
+    corpus = SyntheticCorpus(n_docs=3000, vocab=100, seed=3)
+    pipe = PackedPipeline(corpus, seq_len=64, global_batch=4)
+    pos = rng.integers(0, corpus.total_tokens - 1, 4000).astype(np.uint64)
+    d, o = pipe.index.locate(pos)
+    dref = np.searchsorted(corpus.boundaries, pos, side="right") - 1
+    assert np.array_equal(d, dref)
+
+
+def test_packing_resumable():
+    corpus = SyntheticCorpus(n_docs=500, vocab=50, seed=4)
+    pipe = PackedPipeline(corpus, seq_len=32, global_batch=4, n_hosts=2)
+    a = pipe.batch(7, host=1)
+    pipe2 = PackedPipeline(corpus, seq_len=32, global_batch=4, n_hosts=2)
+    b = pipe2.batch(7, host=1)          # fresh pipeline, same (step, host)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert np.array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+# --------------------------------------------------------- checkpoint ----
+
+def test_store_roundtrip_and_point_reads():
+    tree = {"p": {"w": np.random.default_rng(0).normal(
+        0, 1, (17, 9)).astype(np.float32)},
+        "opt": [np.arange(5), np.float64(2.5).reshape(())]}
+    with tempfile.TemporaryDirectory() as td:
+        p = pathlib.Path(td) / "t.ckpt"
+        save_pytree(p, tree)
+        back = load_pytree(p, tree)
+        assert np.array_equal(back["p"]["w"], tree["p"]["w"])
+        assert np.array_equal(back["opt"][0], tree["opt"][0])
+        r = StoreReader.open(p)
+        assert np.array_equal(r.read("p/w"), tree["p"]["w"])
+        assert sorted(r.names()) == sorted(["p/w", "opt[0]", "opt[1]"])
+
+
+def test_manager_retention_resume_and_crash_safety():
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2, every=2)
+        like = {"w": np.zeros(3, np.float32)}
+        saved = [s for s in range(7)
+                 if mgr.maybe_save(s, {"w": np.full(3, s, np.float32)},
+                                   blocking=True)]
+        assert saved == [0, 2, 4, 6]
+        assert mgr.steps() == [4, 6]
+        step, st = mgr.restore_latest(like)
+        assert step == 6 and st["w"][0] == 6
+        # a stray .tmp (crash mid-save) must not break restore
+        (pathlib.Path(td) / "step_00000008.tmp").write_bytes(b"garbage")
+        step, _ = mgr.restore_latest(like)
+        assert step == 6
+
+
+def test_elastic_restore_device_put():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=1, every=1)
+        state = {"w": np.arange(8, dtype=np.float32)}
+        mgr.save(0, state)
+        sh = {"w": NamedSharding(mesh, P("data"))}
+        step, placed = mgr.restore_sharded(state, sh)
+        assert placed["w"].sharding == sh["w"]
+        assert np.array_equal(np.asarray(placed["w"]), state["w"])
+
+
+# ------------------------------------------------------------ paged KV ----
+
+@given(st.lists(st.tuples(st.integers(0, 200), st.integers(0, 2**20)),
+                min_size=1, max_size=300, unique=True))
+def test_page_table_property(pairs):
+    pt = PageTable(rebuild_threshold=32)
+    keys = page_key(np.asarray([p[0] for p in pairs]),
+                    np.asarray([p[1] % 1000 for p in pairs]))
+    keys, idx = np.unique(keys, return_index=True)
+    vals = np.arange(keys.size)
+    pt.insert(keys, vals)
+    assert np.array_equal(pt.lookup(keys), vals)
+    # remove half, re-query
+    pt.remove(keys[::2])
+    got = pt.lookup(keys)
+    assert np.all(got[::2] == -1)
+    assert np.array_equal(got[1::2], vals[1::2])
+
+
+def test_kv_store_pool_reuse():
+    store = PagedKVStore(page_tokens=4, n_pages=8)
+    kv = np.arange(32, dtype=np.float32).reshape(16, 2)
+    store.store(1, kv)                    # 4 pages
+    store.store(2, kv[:12])               # 3 pages
+    try:
+        store.store(3, kv)                # needs 4, only 1 free
+        assert False
+    except MemoryError:
+        pass
+    store.release(1, 16)
+    store.store(3, kv)                    # now fits
+    assert np.array_equal(store.fetch(3, 16), kv)
+
+
+# ---------------------------------------------------------- compression ----
+
+def test_compression_error_feedback_identity(rng):
+    g = {"a": jnp.asarray(rng.normal(0, 1, (32, 32)), jnp.float32),
+         "b": jnp.asarray(rng.normal(0, 1, (128,)), jnp.float32)}
+    st_ = compress_init(g)
+    sent, st_, stats = compress_grads(g, st_, density=0.05)
+    for k in g:
+        total = np.asarray(sent[k] + st_.residual[k])
+        np.testing.assert_allclose(total, np.asarray(g[k]), atol=1e-6)
+    dens = sum(int(jnp.sum(sent[k] != 0)) for k in g) / stats["total_elems"]
+    assert dens <= 0.12
+
+
+# ------------------------------------------------------------- sharding ----
+
+def test_logical_spec_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import logical_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # vocab 504 on a 1-sized model axis shards fine; simulate 16 via rules
+    spec = logical_spec(("vocab", "embed"), (504, 64), mesh,
+                        {"vocab": ("model",), "embed": ()})
+    assert spec == P("model") or spec == P()   # divisible by 1
+    # a fake mesh axis not present is dropped silently
+    spec = logical_spec(("x",), (10,), mesh, {"x": ("nonexistent",)})
+    assert spec == P()
+
+
+def test_tree_shardings_paths():
+    import numpy as np
+    from repro.configs import get_smoke
+    from repro.models import Model
+    from repro.parallel.sharding import tree_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_smoke("phi3-mini-3.8b")
+    m = Model(cfg)
+    params, axes = m.init(abstract=True)
+    sh = tree_shardings(params, axes, mesh)
+    flat = jax.tree.leaves(sh)
+    assert len(flat) == len(jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------- watchdog ----
+
+def test_straggler_watchdog():
+    from repro.launch.watchdog import StragglerWatchdog
+    dog = StragglerWatchdog(n_hosts=8, threshold=1.5)
+    for step in range(10):
+        for h in range(8):
+            dog.record(h, 1.0 if h != 3 else 2.5)   # host 3 is slow
+    assert dog.stragglers() == [3]
+    rep = dog.report()
+    assert abs(rep["median_s"] - 1.0) < 0.05
+    # recovery: host 3 speeds back up, flag clears
+    for _ in range(30):
+        dog.record(3, 1.0)
+    assert dog.stragglers() == []
