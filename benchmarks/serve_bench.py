@@ -1,0 +1,64 @@
+"""`serve` section: PlexService throughput per backend -> BENCH_lookup.json.
+
+For every synthetic SOSD dataset and eps in {16, 64, 256}, builds a
+PlexService and measures best-of-repeats ns/lookup through each backend
+(numpy reference, jit'd jnp, Pallas-interpret). Results are verified against
+np.searchsorted before timing, appended to the CSV row stream, and written
+to ``BENCH_lookup.json`` with a schema-stable record layout so future PRs
+can diff the perf trajectory:
+
+    {"dataset": str, "n": int, "eps": int, "backend": str,
+     "ns_per_lookup": float, "build_s": float, "size_bytes": int}
+
+Pallas interpret mode is a correctness harness, not a timing target, so it
+is measured over a smaller query slice; the recorded number tracks
+regression trends only.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.index import BACKENDS
+from repro.serving import PlexService
+
+from .common import datasets, queries
+
+EPS_SWEEP = (16, 64, 256)
+OUT_PATH = pathlib.Path("BENCH_lookup.json")
+PALLAS_QUERY_CAP = 8_192
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("serve,dataset,n,eps,backend,ns_per_lookup,build_s,"
+                "size_bytes")
+    records: list[dict] = []
+    for dname, keys in datasets().items():
+        q = queries(keys)
+        want = np.searchsorted(keys, q, side="left")
+        for eps in EPS_SWEEP:
+            svc = PlexService(keys, eps=eps)
+            for backend in BACKENDS:
+                qb = q[:PALLAS_QUERY_CAP] if backend == "pallas" else q
+                got = svc.lookup(qb, backend=backend)
+                assert np.array_equal(got, want[:qb.size]), (
+                    dname, eps, backend, "serve lookup wrong")
+                ns = svc.throughput(qb, backends=(backend,))[backend]
+                rows.append(f"serve,{dname},{keys.size},{eps},{backend},"
+                            f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes}")
+                records.append({
+                    "dataset": dname, "n": int(keys.size), "eps": int(eps),
+                    "backend": backend, "ns_per_lookup": round(float(ns), 1),
+                    "build_s": round(float(svc.build_s), 4),
+                    "size_bytes": int(svc.size_bytes),
+                })
+    OUT_PATH.write_text(json.dumps(records, indent=1))
+    rows.append(f"# serve wrote {OUT_PATH} ({len(records)} records)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

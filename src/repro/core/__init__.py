@@ -8,12 +8,14 @@ Lookup paths:
 """
 from .autotune import TuneResult, cht_cost_model, radix_cost_model, tune
 from .cht import CHT, adjacent_lcp, build_cht
+from .index import BACKENDS, LearnedIndex
 from .plex import PLEX, bounded_lower_bound, build_plex
 from .radix_table import RadixTable, build_radix_table
 from .spline import Spline, build_spline
 
 __all__ = [
-    "CHT", "PLEX", "RadixTable", "Spline", "TuneResult", "adjacent_lcp",
-    "bounded_lower_bound", "build_cht", "build_plex", "build_radix_table",
-    "build_spline", "cht_cost_model", "radix_cost_model", "tune",
+    "BACKENDS", "CHT", "LearnedIndex", "PLEX", "RadixTable", "Spline",
+    "TuneResult", "adjacent_lcp", "bounded_lower_bound", "build_cht",
+    "build_plex", "build_radix_table", "build_spline", "cht_cost_model",
+    "radix_cost_model", "tune",
 ]

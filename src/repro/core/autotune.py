@@ -58,7 +58,8 @@ def radix_cost_model(spline_keys: np.ndarray, data_keys: np.ndarray,
     byts = np.zeros(r_hi + 1, dtype=np.int64)
     rel_s = sk - sk[0]
     rel_d = np.where(dk > sk[0], dk - sk[0], np.uint64(0))
-    hist = np.bincount(rel_d >> np.uint64(bits - r_hi),
+    # int64 cast is exact (prefixes < 2^22); numpy 2.x bincount rejects u64
+    hist = np.bincount((rel_d >> np.uint64(bits - r_hi)).astype(np.int64),
                        minlength=1 << r_hi).astype(np.int64)
     n = dk.size
     for r in range(1, r_hi + 1):

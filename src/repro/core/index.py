@@ -1,0 +1,111 @@
+"""LearnedIndex — one lookup API over every PLEX backend.
+
+The repo grows three lookup paths (the numpy reference in ``plex.py``, the
+portable jit'd jnp pipeline, and the Pallas TPU pipeline). ``LearnedIndex``
+is the single dispatch point the serving layer (and every later scaling PR)
+builds on:
+
+    idx = LearnedIndex.build(keys, eps=64)
+    idx.lookup(q)                      # default backend
+    idx.lookup(q, backend="jnp")       # explicit dispatch
+
+Backends:
+
+* ``"numpy"``  — vectorised float64 host reference (``PLEX.lookup``).
+* ``"jnp"``    — jit-compiled pure-jnp pipeline, portable to CPU/GPU/TPU
+  (``kernels.jnp_lookup.JnpPlex``).
+* ``"pallas"`` — the Pallas kernel pipeline (``kernels.ops.DevicePlex``);
+  runs under interpret mode on CPU, compiled on TPU.
+
+All backends return the index of the first occurrence for present keys
+(identical across backends); for absent keys each returns the lower bound
+within its eps window, which may differ by the documented float32 slack at
+the extreme array edge. Accelerated backends are constructed lazily and
+cached, so a host-only user never imports jax kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .plex import PLEX, build_plex
+
+BACKENDS = ("numpy", "jnp", "pallas")
+
+
+@dataclasses.dataclass
+class LearnedIndex:
+    plex: PLEX
+    default_backend: str = "numpy"
+    block: int = 512
+    device: Any = None            # jax device for the jnp planes (optional)
+    _jnp: Any = dataclasses.field(default=None, repr=False)
+    _pallas: Any = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.default_backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.default_backend!r}; "
+                             f"expected one of {BACKENDS}")
+
+    @classmethod
+    def build(cls, keys: np.ndarray, eps: int, *, backend: str = "numpy",
+              block: int = 512, device: Any = None, **build_kw
+              ) -> "LearnedIndex":
+        """Build the underlying PLEX (host-side, the paper's single-pass
+        build) and wrap it for multi-backend dispatch."""
+        return cls(plex=build_plex(keys, eps, **build_kw),
+                   default_backend=backend, block=block, device=device)
+
+    # -- passthrough metadata ------------------------------------------------
+    @property
+    def keys(self) -> np.ndarray:
+        return self.plex.keys
+
+    @property
+    def eps(self) -> int:
+        return self.plex.eps
+
+    @property
+    def size_bytes(self) -> int:
+        return self.plex.size_bytes
+
+    @property
+    def stats(self):
+        return self.plex.stats
+
+    @property
+    def name(self) -> str:
+        return "LearnedIndex"
+
+    # -- dispatch ------------------------------------------------------------
+    def backend_impl(self, backend: str | None = None) -> Any:
+        """The (lazily constructed, cached) implementation for ``backend``."""
+        backend = backend or self.default_backend
+        if backend == "numpy":
+            return self.plex
+        if backend == "jnp":
+            if self._jnp is None:
+                from ..kernels.jnp_lookup import JnpPlex
+                self._jnp = JnpPlex.from_plex(self.plex, block=self.block,
+                                              device=self.device)
+            return self._jnp
+        if backend == "pallas":
+            if self._pallas is None:
+                from ..kernels.ops import DevicePlex
+                self._pallas = DevicePlex.from_plex(self.plex,
+                                                    block=self.block)
+            return self._pallas
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+
+    def warmup(self, backend: str | None = None) -> None:
+        """Force construction + jit compilation (one block-sized lookup)."""
+        impl = self.backend_impl(backend)
+        if impl is not self.plex:
+            impl.lookup(self.plex.keys[:1])
+
+    def lookup(self, q: np.ndarray, backend: str | None = None) -> np.ndarray:
+        """First-occurrence index per query key (PLEX.lookup contract)."""
+        return self.backend_impl(backend).lookup(q)

@@ -33,20 +33,25 @@ def bounded_lower_bound(keys: np.ndarray, q: np.ndarray, lo: np.ndarray,
     side="right": largest i in [lo, hi] with keys[i] <= q (predecessor;
     assumes keys[lo] <= q or the answer saturates at lo).
     side="left": smallest i in [lo, hi] with keys[i] >= q (lower bound;
-    saturates at hi if none).
+    returns hi + 1 if no window key is >= q, matching searchsorted on a
+    full [0, n-1] window).
     Fixed trip count ceil(log2(max window)) — the TPU-friendly form.
     """
     lo = lo.astype(np.int64).copy()
     hi = hi.astype(np.int64).copy()
     width = int(np.max(hi - lo)) if lo.size else 0
-    trips = max(int(np.ceil(np.log2(width + 1))), 0) if width > 0 else 0
     if side == "right":
+        # answer space [lo, hi]: width + 1 candidates
+        trips = max(int(np.ceil(np.log2(width + 1))), 0) if width > 0 else 0
         for _ in range(trips):
             mid = (lo + hi + 1) >> 1
             go_hi = keys[np.minimum(mid, keys.size - 1)] <= q
             lo = np.where(go_hi, mid, lo)
             hi = np.where(go_hi, hi, mid - 1)
         return lo
+    # answer space [lo, hi + 1]: width + 2 candidates (hi + 1 = "no window
+    # key is >= q"), so one extra trip when width + 2 crosses a power of two
+    trips = int(np.ceil(np.log2(width + 2))) if lo.size else 0
     for _ in range(trips):
         mid = (lo + hi) >> 1
         go_lo = keys[np.minimum(mid, keys.size - 1)] >= q

@@ -6,6 +6,9 @@ interpret mode on CPU; BlockSpecs keep lanes at multiples of 128 for the
 TPU target.
 """
 from .flash_attention import flash_attention_fwd
+from .jnp_lookup import JnpPlex
 from .ops import DevicePlex
+from .planes import PlexPlanes, build_planes
 
-__all__ = ["DevicePlex", "flash_attention_fwd"]
+__all__ = ["DevicePlex", "JnpPlex", "PlexPlanes", "build_planes",
+           "flash_attention_fwd"]

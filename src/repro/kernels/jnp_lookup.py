@@ -1,0 +1,93 @@
+"""Portable jit-compiled pure-jnp PLEX lookup (CPU/GPU/TPU, no Pallas).
+
+Same pipeline as ``ops.DevicePlex`` — segment lookup (radix | CHT) ->
+window gather -> branchless compare-and-count probe — but expressed as
+plain ``jnp`` on the shared ``PlexPlanes``, so it runs anywhere XLA does.
+The segment math is literally the Pallas kernel bodies
+(``plex_segment_lookup.radix_window_base`` / ``cht_window_base``), which
+keeps the two accelerated backends numerically identical; every search has
+a fixed trip count (one masked sweep, or log2(window) bisect rounds), the
+TPU-friendly form inherited from ``core.plex.bounded_lower_bound``.
+
+Batches are processed in fixed ``block``-shaped chunks so XLA compiles the
+pipeline exactly once per index regardless of batch size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.plex import PLEX
+from .pairs import extract_bits, pair_lt, split_u64
+from .planes import (PlexPlanes, build_planes, finalize_indices, pad_queries)
+from .plex_segment_lookup import (DEFAULT_BLOCK, cht_window_base,
+                                  radix_window_base)
+
+
+def _jnp_pipeline(pp: PlexPlanes, qhi, qlo):
+    s = pp.static
+    n_spline = pp.skhi.shape[0]
+    if pp.kind == "radix":
+        base = radix_window_base(
+            qhi, qlo, pp.layer_arrays["table"], pp.skhi, pp.sklo, pp.spos,
+            shift=s["shift"], r=s["r"], min_hi=s["min_hi"],
+            min_lo=s["min_lo"], max_win=s["max_win"], n_spline=n_spline,
+            eps_eff=pp.eps_eff, n_data=pp.n_data, window=pp.window,
+            mode=s["mode"])
+    else:
+        bins = jnp.stack([extract_bits(qhi, qlo, lvl * s["r"], s["r"])
+                          for lvl in range(s["levels"])])
+        base = cht_window_base(
+            qhi, qlo, bins, pp.layer_arrays["cells"], pp.skhi, pp.sklo,
+            pp.spos, r=s["r"], levels=s["levels"], delta=s["delta"],
+            n_spline=n_spline, eps_eff=pp.eps_eff, n_data=pp.n_data,
+            window=pp.window, mode=s["mode"])
+    offs = jnp.arange(pp.window, dtype=jnp.int32)
+    idx = base[:, None] + offs[None, :]
+    whi = jnp.take(pp.dhi, idx)
+    wlo = jnp.take(pp.dlo, idx)
+    lt = pair_lt(whi, wlo, qhi[:, None], qlo[:, None])
+    return base + jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+@dataclasses.dataclass
+class JnpPlex:
+    """jit'd pure-jnp lookup over ``PlexPlanes`` (same contract as
+    ``DevicePlex.lookup``; backend-portable)."""
+
+    planes: PlexPlanes
+    block: int
+    _fn: Any = None
+
+    @classmethod
+    def from_plex(cls, px: PLEX, *, block: int = DEFAULT_BLOCK,
+                  device=None) -> "JnpPlex":
+        pp = build_planes(px)
+        if device is not None:
+            put = functools.partial(jax.device_put, device=device)
+            pp = dataclasses.replace(
+                pp, skhi=put(pp.skhi), sklo=put(pp.sklo), spos=put(pp.spos),
+                dhi=put(pp.dhi), dlo=put(pp.dlo),
+                layer_arrays={k: put(v) for k, v in pp.layer_arrays.items()})
+        jp = cls(planes=pp, block=block)
+        jp._fn = jax.jit(functools.partial(_jnp_pipeline, pp))
+        return jp
+
+    def lookup_planes(self, qhi, qlo):
+        """One [block]-shaped chunk of query planes -> raw int32 indices
+        (may exceed ``n_real`` for past-the-end absent keys; callers clamp)."""
+        return self._fn(qhi, qlo)
+
+    def lookup(self, q: np.ndarray) -> np.ndarray:
+        """Batched lookup; same contract as PLEX.lookup for present keys."""
+        qp, b = pad_queries(q, self.block)
+        qh, ql = split_u64(qp)
+        outs = [np.asarray(self._fn(jnp.asarray(qh[i:i + self.block]),
+                                    jnp.asarray(ql[i:i + self.block])))
+                for i in range(0, qp.size, self.block)]
+        return finalize_indices(np.concatenate(outs), b, self.planes.n_real)

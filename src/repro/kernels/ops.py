@@ -1,17 +1,15 @@
 """jit'd device lookup path assembling the Pallas kernels (TPU target).
 
 ``DevicePlex.from_plex`` converts a host-built ``repro.core.PLEX`` into device
-planes + static search parameters; ``DevicePlex.lookup`` runs the batched
-pipeline:
+planes + static search parameters (shared with the portable jnp backend via
+``planes.build_planes``); ``DevicePlex.lookup`` runs the batched pipeline:
 
     segment kernel (radix | CHT)  ->  XLA HBM window gather  ->
     bounded_search kernel
 
-Float32 interpolation on TPU cannot reproduce the host's float64 predictions
-bit-for-bit, so the eps window is widened by a statically-computed ``slack``
-(2 + max segment position span * 2^-22, covering worst-case f32 rounding of
-``y0 + t*(y1-y0)``); correctness remains *by construction*, not by accident.
-The data planes are padded with the maximum key so window reads never wrap.
+The eps-window slack covering float32 interpolation rounding is computed in
+``planes.py``; the data planes are padded with the maximum key so window
+reads never wrap.
 """
 from __future__ import annotations
 
@@ -23,19 +21,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cht import CHT
 from ..core.plex import PLEX
-from ..core.radix_table import RadixTable
 from .bounded_search import bounded_search
 from .pairs import extract_bits, split_u64
+from .planes import (COUNT_MODE_MAX, build_planes, finalize_indices,
+                     pad_queries)
 from .plex_segment_lookup import (DEFAULT_BLOCK, cht_segment_lookup,
                                   radix_segment_lookup)
 
-COUNT_MODE_MAX = 512    # windows at most this wide use compare-and-count
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+__all__ = ["COUNT_MODE_MAX", "DevicePlex"]
 
 
 @dataclasses.dataclass
@@ -62,59 +56,21 @@ class DevicePlex:
     @classmethod
     def from_plex(cls, px: PLEX, *, block: int = DEFAULT_BLOCK,
                   interpret: bool = True) -> "DevicePlex":
-        skh, skl = split_u64(px.spline.keys)
-        spos = px.spline.positions.astype(np.float32)
-        if px.spline.positions.size and px.spline.positions[-1] >= (1 << 24):
-            raise ValueError("float32 rank plane supports < 2^24 positions; "
-                             "shard the index first (serving does)")
-        spans = np.diff(px.spline.positions)
-        max_span = int(spans.max()) if spans.size else 1
-        slack = int(np.ceil(max_span * 2.0 ** -22)) + 2
-        eps_eff = px.eps + slack
-        window = _round_up(2 * eps_eff + 2, 128)
-
-        n_real = px.keys.size
-        n_pad = max(_round_up(n_real, 128), window)
-        pad = np.full(n_pad - n_real, np.iinfo(np.uint64).max, dtype=np.uint64)
-        dh, dl = split_u64(np.concatenate([px.keys, pad]))
-
-        if isinstance(px.layer, RadixTable):
-            kind = "radix"
-            mk = int(px.layer.min_key)
-            layer_arrays = {"table": jnp.asarray(px.layer.table)}
-            max_win = px.layer.max_window
-            static = dict(shift=int(px.layer.shift), r=int(px.layer.r),
-                          min_hi=(mk >> 32) & 0xFFFFFFFF,
-                          min_lo=mk & 0xFFFFFFFF,
-                          max_win=int(max_win),
-                          mode="count" if max_win <= COUNT_MODE_MAX
-                          else "bisect")
-        else:
-            assert isinstance(px.layer, CHT)
-            kind = "cht"
-            layer_arrays = {"cells": jnp.asarray(px.layer.cells)}
-            static = dict(r=int(px.layer.r),
-                          levels=int(px.layer.max_depth) + 1,
-                          delta=int(px.layer.delta),
-                          mode="count" if px.layer.delta + 1 <= COUNT_MODE_MAX
-                          else "bisect")
-        dp = cls(skhi=jnp.asarray(skh), sklo=jnp.asarray(skl),
-                 spos=jnp.asarray(spos), dhi=jnp.asarray(dh),
-                 dlo=jnp.asarray(dl), n_data=n_pad, n_real=n_real, kind=kind,
-                 layer_arrays=layer_arrays, static=static, eps_eff=eps_eff,
-                 window=window, block=block, interpret=interpret)
+        pp = build_planes(px)
+        dp = cls(skhi=pp.skhi, sklo=pp.sklo, spos=pp.spos, dhi=pp.dhi,
+                 dlo=pp.dlo, n_data=pp.n_data, n_real=pp.n_real, kind=pp.kind,
+                 layer_arrays=pp.layer_arrays, static=pp.static,
+                 eps_eff=pp.eps_eff, window=pp.window, block=block,
+                 interpret=interpret)
         dp._fn = jax.jit(functools.partial(_lookup_pipeline, dp))
         return dp
 
     def lookup(self, q: np.ndarray) -> np.ndarray:
         """Batched device lookup; same contract as PLEX.lookup."""
-        q = np.asarray(q, dtype=np.uint64)
-        b = q.size
-        bp = _round_up(max(b, self.block), self.block)
-        qp = np.concatenate([q, np.repeat(q[-1:], bp - b)]) if bp > b else q
+        qp, b = pad_queries(q, self.block)
         qh, ql = split_u64(qp)
-        out = np.asarray(self._fn(jnp.asarray(qh), jnp.asarray(ql)))
-        return np.minimum(out[:b].astype(np.int64), self.n_real)
+        out = self._fn(jnp.asarray(qh), jnp.asarray(ql))
+        return finalize_indices(out, b, self.n_real)
 
 
 def _lookup_pipeline(dp: DevicePlex, qhi, qlo):

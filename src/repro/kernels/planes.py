@@ -1,0 +1,119 @@
+"""Device-plane preparation shared by every accelerated PLEX backend.
+
+A host-built ``repro.core.PLEX`` is converted once into uint32 key planes
+(TPUs have no u64, and the same representation is portable to any jax
+backend), a float32 rank plane, max-key-padded data planes, and the static
+search parameters (eps slack, window geometry, layer mode). Both the Pallas
+pipeline (``ops.DevicePlex``) and the portable pure-jnp pipeline
+(``jnp_lookup.JnpPlex``) consume the same ``PlexPlanes``, so their numeric
+contracts agree by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cht import CHT
+from ..core.plex import PLEX
+from ..core.radix_table import RadixTable
+from .pairs import split_u64
+
+COUNT_MODE_MAX = 512    # windows at most this wide use compare-and-count
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_queries(q: np.ndarray, block: int) -> tuple[np.ndarray, int]:
+    """Pad a query batch to a block multiple by repeating the last query.
+
+    Returns (padded queries, original batch size). Shared batch-entry
+    contract of every accelerated backend.
+    """
+    q = np.asarray(q, dtype=np.uint64)
+    b = q.size
+    bp = round_up(max(b, block), block)
+    if bp > b:
+        q = np.concatenate([q, np.repeat(q[-1:], bp - b)])
+    return q, b
+
+
+def finalize_indices(out, n_queries: int, n_real: int) -> np.ndarray:
+    """Strip padding lanes and clamp past-the-end absent-key results to
+    ``n_real``. Shared batch-exit contract of every accelerated backend."""
+    return np.minimum(np.asarray(out)[:n_queries].astype(np.int64), n_real)
+
+
+@dataclasses.dataclass
+class PlexPlanes:
+    # spline planes
+    skhi: Any
+    sklo: Any
+    spos: Any                 # float32 ranks
+    # data planes (padded to >= window with the max key)
+    dhi: Any
+    dlo: Any
+    n_data: int               # padded length
+    n_real: int
+    # layer
+    kind: str                 # "radix" | "cht"
+    layer_arrays: dict[str, Any]
+    static: dict[str, Any]
+    eps_eff: int
+    window: int
+
+
+def build_planes(px: PLEX) -> PlexPlanes:
+    """Host PLEX -> device planes + static search parameters.
+
+    Float32 interpolation cannot reproduce the host's float64 predictions
+    bit-for-bit, so the eps window is widened by a statically-computed
+    ``slack`` (2 + max segment position span * 2^-22, covering worst-case
+    f32 rounding of ``y0 + t*(y1-y0)``); correctness remains *by
+    construction*, not by accident.
+    """
+    skh, skl = split_u64(px.spline.keys)
+    spos = px.spline.positions.astype(np.float32)
+    if px.spline.positions.size and px.spline.positions[-1] >= (1 << 24):
+        raise ValueError("float32 rank plane supports < 2^24 positions; "
+                         "shard the index first (serving does)")
+    spans = np.diff(px.spline.positions)
+    max_span = int(spans.max()) if spans.size else 1
+    slack = int(np.ceil(max_span * 2.0 ** -22)) + 2
+    eps_eff = px.eps + slack
+    window = round_up(2 * eps_eff + 2, 128)
+
+    n_real = px.keys.size
+    n_pad = max(round_up(n_real, 128), window)
+    pad = np.full(n_pad - n_real, np.iinfo(np.uint64).max, dtype=np.uint64)
+    dh, dl = split_u64(np.concatenate([px.keys, pad]))
+
+    if isinstance(px.layer, RadixTable):
+        kind = "radix"
+        mk = int(px.layer.min_key)
+        layer_arrays = {"table": jnp.asarray(px.layer.table)}
+        max_win = px.layer.max_window
+        static = dict(shift=int(px.layer.shift), r=int(px.layer.r),
+                      min_hi=(mk >> 32) & 0xFFFFFFFF,
+                      min_lo=mk & 0xFFFFFFFF,
+                      max_win=int(max_win),
+                      mode="count" if max_win <= COUNT_MODE_MAX
+                      else "bisect")
+    else:
+        assert isinstance(px.layer, CHT)
+        kind = "cht"
+        layer_arrays = {"cells": jnp.asarray(px.layer.cells)}
+        static = dict(r=int(px.layer.r),
+                      levels=int(px.layer.max_depth) + 1,
+                      delta=int(px.layer.delta),
+                      mode="count" if px.layer.delta + 1 <= COUNT_MODE_MAX
+                      else "bisect")
+    return PlexPlanes(skhi=jnp.asarray(skh), sklo=jnp.asarray(skl),
+                      spos=jnp.asarray(spos), dhi=jnp.asarray(dh),
+                      dlo=jnp.asarray(dl), n_data=n_pad, n_real=n_real,
+                      kind=kind, layer_arrays=layer_arrays, static=static,
+                      eps_eff=eps_eff, window=window)

@@ -64,16 +64,15 @@ def _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline):
     return y0 + t * (y1 - y0)
 
 
-def _radix_body(qhi_ref, qlo_ref, table_ref, skhi_ref, sklo_ref, spos_ref,
-                base_ref, *, shift, r, min_hi, min_lo, max_win, n_spline,
-                eps_eff, n_data, window, mode):
-    qhi = qhi_ref[...]
-    qlo = qlo_ref[...]
-    table = table_ref[...]
-    skhi = skhi_ref[...]
-    sklo = sklo_ref[...]
-    spos = spos_ref[...]
+def radix_window_base(qhi, qlo, table, skhi, sklo, spos, *, shift, r, min_hi,
+                      min_lo, max_win, n_spline, eps_eff, n_data, window,
+                      mode):
+    """Pure-jnp radix-layer pipeline: queries -> eps-window bases.
 
+    This is the Pallas kernel body's math on plain arrays; the kernel wraps
+    it behind refs and the portable jnp backend (``jnp_lookup.py``) calls it
+    directly, so both paths share one implementation by construction.
+    """
     mh = jnp.uint32(min_hi)
     ml = jnp.uint32(min_lo)
     below = (qhi < mh) | ((qhi == mh) & (qlo < ml))
@@ -104,20 +103,20 @@ def _radix_body(qhi_ref, qlo_ref, table_ref, skhi_ref, sklo_ref, spos_ref,
 
     pred = _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline)
     base = jnp.floor(pred).astype(jnp.int32) - eps_eff
-    base_ref[...] = jnp.clip(base, 0, n_data - window)
+    return jnp.clip(base, 0, n_data - window)
 
 
-def _cht_body(qhi_ref, qlo_ref, bins_ref, cells_ref, skhi_ref, sklo_ref,
-              spos_ref, base_ref, *, r, levels, delta, n_spline, eps_eff,
-              n_data, window, mode):
-    qhi = qhi_ref[...]
-    qlo = qlo_ref[...]
-    bins = bins_ref[...]            # [levels, block]
-    cells = cells_ref[...]
-    skhi = skhi_ref[...]
-    sklo = sklo_ref[...]
-    spos = spos_ref[...]
+def _radix_body(qhi_ref, qlo_ref, table_ref, skhi_ref, sklo_ref, spos_ref,
+                base_ref, **static):
+    base_ref[...] = radix_window_base(
+        qhi_ref[...], qlo_ref[...], table_ref[...], skhi_ref[...],
+        sklo_ref[...], spos_ref[...], **static)
 
+
+def cht_window_base(qhi, qlo, bins, cells, skhi, sklo, spos, *, r, levels,
+                    delta, n_spline, eps_eff, n_data, window, mode):
+    """Pure-jnp CHT-layer pipeline (see ``radix_window_base``). ``bins`` is
+    int32 [levels, B] of per-level radix digits."""
     fanout = jnp.int32(1 << r)
     node = jnp.zeros(qhi.shape, jnp.int32)
     out = jnp.zeros(qhi.shape, jnp.int32)
@@ -153,7 +152,14 @@ def _cht_body(qhi_ref, qlo_ref, bins_ref, cells_ref, skhi_ref, sklo_ref,
 
     pred = _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline)
     base = jnp.floor(pred).astype(jnp.int32) - eps_eff
-    base_ref[...] = jnp.clip(base, 0, n_data - window)
+    return jnp.clip(base, 0, n_data - window)
+
+
+def _cht_body(qhi_ref, qlo_ref, bins_ref, cells_ref, skhi_ref, sklo_ref,
+              spos_ref, base_ref, **static):
+    base_ref[...] = cht_window_base(
+        qhi_ref[...], qlo_ref[...], bins_ref[...], cells_ref[...],
+        skhi_ref[...], sklo_ref[...], spos_ref[...], **static)
 
 
 def radix_segment_lookup(qhi, qlo, table, skhi, sklo, spos, *, shift, r,

@@ -131,11 +131,19 @@ def _lower_cell(cfg, shape, mesh, rules, overrides):
         return fn.lower(p_specs, cache, tokens, pos)
 
 
+def _cost_dict(compiled) -> dict:
+    """cost_analysis() returns a dict (new jax) or a per-device list (old)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _cost_of(cfg, shape, mesh, rules, overrides) -> dict:
     with unrolled_scans(True):
         lowered = _lower_cell(cfg, shape, mesh, rules, overrides)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -236,7 +244,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_d = {k: int(getattr(mem, k)) for k in (

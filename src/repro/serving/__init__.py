@@ -1,4 +1,6 @@
 from .engine import ServeEngine
 from .kv_cache import PagedKVStore, PageTable
+from .plex_service import PlexService, ServiceStats, service_mesh
 
-__all__ = ["PagedKVStore", "PageTable", "ServeEngine"]
+__all__ = ["PagedKVStore", "PageTable", "PlexService", "ServeEngine",
+           "ServiceStats", "service_mesh"]

@@ -1,0 +1,215 @@
+"""PlexService — sharded, micro-batched PLEX query serving.
+
+One serving front-end over ``core.index.LearnedIndex``:
+
+* **Key-space sharding.** The sorted key array is split into contiguous
+  shards (boundaries snapped to first occurrences so duplicate runs never
+  straddle a shard); each shard is an independent ``LearnedIndex`` whose
+  device planes are placed round-robin over a ``jax`` mesh
+  (``parallel.sharding`` supplies the mesh/partition-spec plumbing). This
+  is also what keeps every float32 rank plane < 2^24 positions, the
+  device-path requirement for 200M-key scale.
+* **Micro-batching.** Incoming query streams are chopped into fixed
+  ``block``-sized micro-batches (lane-multiple, padded by repeating the
+  final query) so every backend sees one stable shape and jit caches stay
+  warm. Padding/batch counters are tracked in ``ServiceStats``.
+* **Backend dispatch + throughput.** ``lookup`` routes to any of the three
+  backends; ``throughput`` reports best-of-repeats ns/lookup per backend so
+  the ``serve`` benchmark section can emit a schema-stable trajectory.
+
+Global contract: for present keys ``lookup`` returns the global index of
+the first occurrence (identical across backends). For absent keys each
+backend returns its eps-window lower bound, with the documented edge
+behaviour at shard boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core.index import BACKENDS, LearnedIndex
+from ..kernels.pairs import split_u64
+from ..kernels.planes import finalize_indices
+from ..parallel.sharding import logical_sharding
+
+# one logical rule: query batches shard over the mesh's data axis
+_SERVICE_RULES = {"act_batch": ("data",)}
+
+# keep each shard's float32 rank plane well inside the 2^24 limit
+SHARD_MAX_KEYS = 1 << 23
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    queries: int = 0
+    batches: int = 0
+    padded_lanes: int = 0
+
+    def note(self, n_queries: int, n_batches: int, n_padded: int) -> None:
+        self.queries += n_queries
+        self.batches += n_batches
+        self.padded_lanes += n_padded
+
+
+def service_mesh(devices: Sequence | None = None) -> Mesh:
+    """1-D ``data`` mesh over the available jax devices."""
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return Mesh(devs, ("data",))
+
+
+class PlexService:
+    """Serve PLEX lookups for one key set across shards and backends."""
+
+    def __init__(self, keys: np.ndarray, eps: int = 64, *,
+                 n_shards: int | None = None, backend: str = "jnp",
+                 block: int = 1024, mesh: Mesh | None = None,
+                 **build_kw):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if block % 128 != 0:
+            raise ValueError("block must be a multiple of 128 lanes")
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        if keys.size == 0:
+            raise ValueError("cannot serve an empty key set")
+        if np.any(keys[1:] < keys[:-1]):
+            raise ValueError("keys must be sorted")
+        self.keys = keys
+        self.eps = int(eps)
+        self.default_backend = backend
+        self.block = int(block)
+        self.mesh = mesh if mesh is not None else service_mesh()
+        self.stats = ServiceStats()
+
+        if n_shards is None:
+            n_shards = -(-keys.size // SHARD_MAX_KEYS)
+        self.offsets = self._shard_offsets(keys, max(int(n_shards), 1))
+        n_dev = self.mesh.size
+        devs = list(self.mesh.devices.flat)
+        self.shards: list[LearnedIndex] = []
+        t0 = time.perf_counter()
+        for s, off in enumerate(self.offsets):
+            end = (self.offsets[s + 1] if s + 1 < len(self.offsets)
+                   else keys.size)
+            dev = devs[s % n_dev] if len(self.offsets) > 1 else None
+            self.shards.append(LearnedIndex.build(
+                keys[off:end], eps, backend=backend, block=block,
+                device=dev, **build_kw))
+        self.build_s = time.perf_counter() - t0
+        # routing plane: first key of each shard
+        self.shard_min = keys[self.offsets]
+        # fixed per-service: micro-batch query planes shard over "data"
+        self._batch_sharding = logical_sharding(
+            ("act_batch",), (self.block,), self.mesh, _SERVICE_RULES)
+
+    @staticmethod
+    def _shard_offsets(keys: np.ndarray, n_shards: int) -> np.ndarray:
+        """Contiguous shard start offsets, snapped to first occurrences so a
+        duplicate run never straddles a boundary (global first-occurrence
+        semantics stay exact)."""
+        raw = (np.arange(n_shards, dtype=np.int64) * keys.size) // n_shards
+        snapped = np.searchsorted(keys, keys[raw], side="left")
+        snapped[0] = 0
+        return np.unique(snapped)
+
+    # -- metadata -----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def size_bytes(self) -> int:
+        return sum(s.size_bytes for s in self.shards)
+
+    @property
+    def name(self) -> str:
+        return "PlexService"
+
+    # -- serving ------------------------------------------------------------
+    def route(self, q: np.ndarray) -> np.ndarray:
+        """Shard id per query (largest shard whose min key is <= q)."""
+        q = np.asarray(q, dtype=np.uint64)
+        return np.clip(np.searchsorted(self.shard_min, q, side="right") - 1,
+                       0, self.n_shards - 1)
+
+    def _microbatches(self, q: np.ndarray) -> Iterable[np.ndarray]:
+        """Fixed ``block``-sized micro-batches, final one padded by
+        repeating the last query (lane-multiple shapes keep jit caches and
+        TPU tiling happy)."""
+        b = self.block
+        for i in range(0, q.size, b):
+            chunk = q[i:i + b]
+            if chunk.size < b:
+                chunk = np.concatenate(
+                    [chunk, np.repeat(chunk[-1:], b - chunk.size)])
+            yield chunk
+
+    def _lookup_shard(self, shard: LearnedIndex, q: np.ndarray,
+                      backend: str) -> np.ndarray:
+        """Micro-batched lookup of ``q`` (all routed to ``shard``)."""
+        n = q.size
+        out = np.empty(n, dtype=np.int64)
+        n_batches = 0
+        use_spmd = backend == "jnp" and self.n_shards == 1
+        for i, mb in enumerate(self._microbatches(q)):
+            start = i * self.block
+            take = min(self.block, n - start)
+            if use_spmd:
+                got = self._jnp_spmd_lookup(shard, mb)
+            else:
+                got = shard.lookup(mb, backend=backend)
+            out[start:start + take] = got[:take]
+            n_batches += 1
+        self.stats.note(n, n_batches, n_batches * self.block - n)
+        return out
+
+    def _jnp_spmd_lookup(self, shard: LearnedIndex,
+                         mb: np.ndarray) -> np.ndarray:
+        """Single-shard jnp path: shard the query planes over the mesh's
+        ``data`` axis (SPMD data parallelism; a no-op on one device)."""
+        jp = shard.backend_impl("jnp")
+        qh, ql = split_u64(mb)
+        sh = self._batch_sharding
+        out = jp.lookup_planes(jax.device_put(jnp.asarray(qh), sh),
+                               jax.device_put(jnp.asarray(ql), sh))
+        return finalize_indices(out, mb.size, jp.planes.n_real)
+
+    def lookup(self, q: np.ndarray, backend: str | None = None) -> np.ndarray:
+        """Global first-occurrence index per query key."""
+        backend = backend or self.default_backend
+        q = np.asarray(q, dtype=np.uint64)
+        if q.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        if self.n_shards == 1:
+            return self._lookup_shard(self.shards[0], q, backend)
+        sid = self.route(q)
+        out = np.empty(q.size, dtype=np.int64)
+        for s in np.unique(sid):
+            mask = sid == s
+            local = self._lookup_shard(self.shards[s], q[mask], backend)
+            out[mask] = local + int(self.offsets[s])
+        return out
+
+    def warmup(self, backend: str | None = None) -> None:
+        for shard in self.shards:
+            shard.warmup(backend or self.default_backend)
+
+    # -- measurement ---------------------------------------------------------
+    def throughput(self, q: np.ndarray, backends: Sequence[str] = BACKENDS,
+                   repeats: int = 3) -> dict[str, float]:
+        """Best-of-repeats ns per lookup for each backend."""
+        report: dict[str, float] = {}
+        for backend in backends:
+            self.warmup(backend)
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                self.lookup(q, backend=backend)
+                best = min(best, time.perf_counter() - t0)
+            report[backend] = best / q.size * 1e9
+        return report

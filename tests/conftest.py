@@ -1,11 +1,67 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # real single CPU device; only launch/dryrun.py forces 512 host devices.
+import sys
+import types
+
 import numpy as np
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ModuleNotFoundError:
+    # hypothesis is a declared test dependency (pyproject [test] extra) but
+    # may be absent in minimal containers. Degrade gracefully: install a stub
+    # module so test files importing `given`/`strategies` still collect, and
+    # every property test turns into an explicit skip instead of a
+    # collection-time ModuleNotFoundError for the whole suite.
+    _SKIP_MSG = ("hypothesis not installed — property test skipped "
+                 "(pip install 'hypothesis' or the package's [test] extra)")
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            def stub(*args, **kwargs):
+                pytest.skip(_SKIP_MSG)
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco
+
+    def _strategy_factory(_name):
+        def make(*_args, **_kwargs):
+            return None
+
+        return make
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = _strategy_factory  # PEP 562: st.<anything>(...) -> None
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture

@@ -1,0 +1,94 @@
+"""Edge-case contract of core.plex.bounded_lower_bound (both sides)."""
+import numpy as np
+
+from repro.core import bounded_lower_bound
+
+from conftest import sorted_u64
+
+
+def _i64(*xs):
+    return np.asarray(xs, dtype=np.int64)
+
+
+def test_empty_key_array():
+    keys = np.zeros(0, dtype=np.uint64)
+    q = np.zeros(0, dtype=np.uint64)
+    empty = np.zeros(0, dtype=np.int64)
+    for side in ("left", "right"):
+        got = bounded_lower_bound(keys, q, empty, empty, side=side)
+        assert got.size == 0
+
+
+def test_single_element_window():
+    keys = np.asarray([10, 20, 30], dtype=np.uint64)
+    q = np.asarray([20, 20, 20], dtype=np.uint64)
+    lo = _i64(1, 1, 1)
+    hi = _i64(1, 1, 1)
+    for side in ("left", "right"):
+        got = bounded_lower_bound(keys, q, lo, hi, side=side)
+        assert np.array_equal(got, lo), side
+
+
+def test_degenerate_lo_eq_hi_window():
+    """A lo == hi window still resolves its two possible answers: side
+    "left" distinguishes keys[lo] >= q (-> lo) from keys[lo] < q
+    (-> lo + 1, the "nothing in window" sentinel); side "right" pins to
+    the slot (its contract assumes keys[lo] <= q, saturating at lo)."""
+    keys = np.asarray([5, 15, 25, 35], dtype=np.uint64)
+    q = np.asarray([0, 40], dtype=np.uint64)      # below / above everything
+    lo = _i64(2, 1)
+    hi = _i64(2, 1)
+    got = bounded_lower_bound(keys, q, lo, hi, side="left")
+    assert np.array_equal(got, _i64(2, 2))        # 25 >= 0; 15 < 40 -> hi+1
+    got = bounded_lower_bound(keys, q, lo, hi, side="right")
+    assert np.array_equal(got, lo)
+
+
+def test_duplicate_keys_first_occurrence():
+    keys = np.asarray([3, 7, 7, 7, 7, 9, 9, 12], dtype=np.uint64)
+    q = np.asarray([7, 9, 12, 3], dtype=np.uint64)
+    n = keys.size
+    lo = np.zeros(q.size, dtype=np.int64)
+    hi = np.full(q.size, n - 1, dtype=np.int64)
+    got = bounded_lower_bound(keys, q, lo, hi, side="left")
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+    # side="right" is the predecessor search: last index with key <= q
+    got_r = bounded_lower_bound(keys, q, lo, hi, side="right")
+    assert np.array_equal(got_r, np.searchsorted(keys, q, side="right") - 1)
+
+
+def test_absent_key_lower_bound_semantics():
+    keys = np.asarray([10, 20, 20, 30, 40], dtype=np.uint64)
+    # absent keys inside the range -> first index with key >= q
+    q = np.asarray([15, 25, 35], dtype=np.uint64)
+    lo = np.zeros(3, dtype=np.int64)
+    hi = np.full(3, keys.size - 1, dtype=np.int64)
+    got = bounded_lower_bound(keys, q, lo, hi, side="left")
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+    # absent key above every window key -> hi + 1 (searchsorted semantics)
+    above = np.asarray([99], dtype=np.uint64)
+    got = bounded_lower_bound(keys, above, _i64(0), _i64(4), side="left")
+    assert np.array_equal(got, _i64(5))
+
+
+def test_full_window_matches_searchsorted(rng):
+    keys = sorted_u64(rng, 5_000, dups=True)
+    q = np.concatenate([keys[rng.integers(0, keys.size, 2_000)],
+                        rng.integers(0, 1 << 62, 2_000, dtype=np.uint64)])
+    lo = np.zeros(q.size, dtype=np.int64)
+    hi = np.full(q.size, keys.size - 1, dtype=np.int64)
+    got = bounded_lower_bound(keys, q, lo, hi, side="left")
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+
+
+def test_restricted_window_containing_answer(rng):
+    """Any [lo, hi] window that contains the true lower bound resolves it
+    exactly — the eps-window contract PLEX.lookup relies on."""
+    keys = sorted_u64(rng, 3_000, dups=True)
+    q = keys[rng.integers(0, keys.size, 1_000)]
+    want = np.searchsorted(keys, q, side="left")
+    slack = rng.integers(0, 32, (2, q.size))
+    lo = np.clip(want - slack[0], 0, keys.size - 1)
+    hi = np.clip(want + slack[1], 0, keys.size - 1)
+    got = bounded_lower_bound(keys, q, lo, hi, side="left")
+    assert np.array_equal(got, want)

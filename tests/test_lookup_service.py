@@ -1,0 +1,138 @@
+"""LearnedIndex multi-backend dispatch + PlexService serving behaviour."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BACKENDS, LearnedIndex
+from repro.data import generate
+from repro.serving import PlexService
+
+from conftest import sorted_u64
+
+
+def _key_sets(rng):
+    """uniform / lognormal-style / duplicated — the acceptance grid."""
+    return {
+        "uniform": sorted_u64(rng, 20_000),
+        "lognormal": generate("amzn", 20_000),
+        "duplicated": sorted_u64(rng, 20_000, dups=True),
+    }
+
+
+@pytest.mark.parametrize("eps", [16, 64, 256])
+def test_three_way_backend_parity(eps, rng):
+    """numpy, jnp and Pallas-interpret return identical indices for
+    present keys on every key-set shape."""
+    for name, keys in _key_sets(rng).items():
+        q = keys[rng.integers(0, keys.size, 3_000)]
+        want = np.searchsorted(keys, q, side="left")
+        idx = LearnedIndex.build(keys, eps=eps)
+        results = {b: idx.lookup(q, backend=b) for b in BACKENDS}
+        for b, got in results.items():
+            assert np.array_equal(got, want), (name, eps, b)
+
+
+def test_learned_index_dispatch_and_caching(rng):
+    keys = sorted_u64(rng, 5_000)
+    idx = LearnedIndex.build(keys, eps=16, backend="jnp")
+    assert idx.backend_impl("numpy") is idx.plex
+    jp = idx.backend_impl("jnp")
+    assert idx.backend_impl("jnp") is jp          # cached, not rebuilt
+    assert idx.backend_impl() is jp               # default backend
+    assert idx.size_bytes == idx.plex.size_bytes
+    assert idx.eps == 16
+    with pytest.raises(ValueError):
+        idx.lookup(keys[:4], backend="cuda")
+    with pytest.raises(ValueError):
+        LearnedIndex.build(keys, eps=16, backend="nope")
+
+
+def test_service_sharded_parity(rng):
+    keys = sorted_u64(rng, 40_000, dups=True)
+    q = keys[rng.integers(0, keys.size, 10_000)]
+    want = np.searchsorted(keys, q, side="left")
+    svc = PlexService(keys, eps=32, n_shards=4, block=512)
+    assert svc.n_shards == 4
+    for backend in BACKENDS:
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+def test_service_duplicate_run_across_boundary(rng):
+    """A duplicate run wider than a naive shard boundary must still resolve
+    to the global first occurrence (boundaries snap to first occurrences)."""
+    run = np.full(6_000, 1 << 40, np.uint64)
+    keys = np.sort(np.concatenate([sorted_u64(rng, 10_000), run]))
+    svc = PlexService(keys, eps=16, n_shards=8, block=256)
+    q = np.asarray([1 << 40], dtype=np.uint64)
+    want = np.searchsorted(keys, q, side="left")
+    for backend in BACKENDS:
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+def test_service_microbatching_stats(rng):
+    keys = sorted_u64(rng, 8_000)
+    svc = PlexService(keys, eps=16, block=512)
+    q = keys[rng.integers(0, keys.size, 1_100)]   # 3 batches, 436 pad lanes
+    got = svc.lookup(q, backend="numpy")
+    assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
+    assert svc.stats.queries == 1_100
+    assert svc.stats.batches == 3
+    assert svc.stats.padded_lanes == 3 * 512 - 1_100
+    assert svc.lookup(np.zeros(0, np.uint64)).size == 0
+
+
+def test_service_absent_keys_stay_in_eps_window(rng):
+    keys = sorted_u64(rng, 30_000)
+    q = rng.integers(keys[0], keys[-1], 5_000, dtype=np.uint64)
+    want = np.searchsorted(keys, q, side="left")
+    svc = PlexService(keys, eps=16, n_shards=3, block=512)
+    for backend in BACKENDS:
+        got = svc.lookup(q, backend=backend)
+        ok = got == want
+        assert ok.mean() > 0.99, backend
+        # never outside the widened eps window around the true rank
+        assert np.max(np.abs(got - want)) <= 2 * 16 + 2 + 64, backend
+
+
+def test_service_validation(rng):
+    keys = sorted_u64(rng, 1_000)
+    with pytest.raises(ValueError):
+        PlexService(keys, eps=16, block=100)          # not lane-multiple
+    with pytest.raises(ValueError):
+        PlexService(keys[::-1].copy(), eps=16)        # unsorted
+    with pytest.raises(ValueError):
+        PlexService(np.zeros(0, np.uint64), eps=16)   # empty
+    with pytest.raises(ValueError):
+        PlexService(keys, eps=16, backend="cuda")
+
+
+def test_service_throughput_report(rng):
+    keys = sorted_u64(rng, 6_000)
+    q = keys[rng.integers(0, keys.size, 2_048)]
+    svc = PlexService(keys, eps=16, block=512)
+    rep = svc.throughput(q, backends=("numpy", "jnp"), repeats=1)
+    assert set(rep) == {"numpy", "jnp"}
+    assert all(v > 0 for v in rep.values())
+
+
+def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
+    """The serve bench section emits the schema-stable trajectory file."""
+    import benchmarks.serve_bench as sb
+
+    keys = sorted_u64(rng, 6_000, dups=True)
+    monkeypatch.setattr(sb, "datasets", lambda: {"tiny": keys})
+    monkeypatch.setattr(
+        sb, "queries", lambda k, n=None, seed=7:
+        k[np.random.default_rng(seed).integers(0, k.size, 1_024)])
+    monkeypatch.setattr(sb, "EPS_SWEEP", (16,))
+    monkeypatch.setattr(sb, "OUT_PATH", tmp_path / "BENCH_lookup.json")
+    rows = sb.run()
+    assert any(r.startswith("serve,tiny,") for r in rows)
+    records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
+    assert len(records) == len(BACKENDS)
+    for rec in records:
+        assert set(rec) == {"dataset", "n", "eps", "backend",
+                            "ns_per_lookup", "build_s", "size_bytes"}
+        assert rec["n"] == keys.size
+        assert rec["ns_per_lookup"] > 0
