@@ -1,0 +1,88 @@
+"""Perf-trajectory diff: flag ns/lookup regressions between two
+``BENCH_lookup.json`` files.
+
+    python -m benchmarks.bench_diff OLD.json NEW.json [--threshold 0.15]
+
+Records are matched on (dataset, n, eps, backend, workload); a matched
+record whose ``ns_per_lookup`` grew by more than ``--threshold`` (default
+15%) is a regression and the exit code is non-zero. Records present on only
+one side (new datasets, schema-additive fields, removed sweeps) are listed
+but never fail the diff — the trajectory file is allowed to grow.
+
+CI wires this against the previous run's cached artifact when one exists
+(see ``.github/workflows/ci.yml``); it is also handy locally:
+
+    git stash && python -m benchmarks.run --only serve && cp BENCH_lookup.json /tmp/old.json
+    git stash pop && python -m benchmarks.run --only serve
+    python -m benchmarks.bench_diff /tmp/old.json BENCH_lookup.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+Key = tuple
+
+
+def _key(rec: dict) -> Key:
+    return (rec["dataset"], rec["n"], rec["eps"], rec["backend"],
+            rec.get("workload", "uniform"))
+
+
+def load(path: str | pathlib.Path) -> dict[Key, dict]:
+    records = json.loads(pathlib.Path(path).read_text())
+    out: dict[Key, dict] = {}
+    for rec in records:
+        out[_key(rec)] = rec
+    return out
+
+
+def diff(old: dict[Key, dict], new: dict[Key, dict],
+         threshold: float) -> tuple[list[str], list[str]]:
+    """-> (report lines, regression lines). Regressions non-empty => fail."""
+    lines: list[str] = []
+    regressions: list[str] = []
+    for key in sorted(set(old) & set(new)):
+        o = float(old[key]["ns_per_lookup"])
+        n = float(new[key]["ns_per_lookup"])
+        ratio = n / o if o > 0 else float("inf")
+        tag = ""
+        if ratio > 1.0 + threshold:
+            tag = "  REGRESSION"
+        elif ratio < 1.0 - threshold:
+            tag = "  improved"
+        line = (f"{'/'.join(str(k) for k in key)}: "
+                f"{o:.1f} -> {n:.1f} ns/lookup ({ratio:.2f}x){tag}")
+        lines.append(line)
+        if tag == "  REGRESSION":
+            regressions.append(line)
+    for key in sorted(set(new) - set(old)):
+        lines.append(f"{'/'.join(str(k) for k in key)}: new record "
+                     f"({float(new[key]['ns_per_lookup']):.1f} ns/lookup)")
+    for key in sorted(set(old) - set(new)):
+        lines.append(f"{'/'.join(str(k) for k in key)}: dropped")
+    return lines, regressions
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative ns/lookup growth that fails (default .15)")
+    args = ap.parse_args(argv)
+    lines, regressions = diff(load(args.old), load(args.new), args.threshold)
+    print("\n".join(lines) if lines else "no comparable records")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) past "
+              f"{args.threshold:.0%}:", file=sys.stderr)
+        for line in regressions:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,13 +2,20 @@
 
 For every synthetic SOSD dataset and eps in {16, 64, 256}, builds a
 PlexService and measures best-of-repeats ns/lookup through each backend
-(numpy reference, jit'd jnp, Pallas-interpret). Results are verified against
-np.searchsorted before timing, appended to the CSV row stream, and written
-to ``BENCH_lookup.json`` with a schema-stable record layout so future PRs
-can diff the perf trajectory:
+(numpy reference, jit'd jnp, Pallas-interpret). A Zipfian skewed workload
+(``zipf_queries``: hot present keys + a configurable absent-key fraction)
+is additionally measured through the jnp serving path with the device-side
+hot-key cache enabled, reporting the measured hit rate. Results are
+verified against np.searchsorted before timing, appended to the CSV row
+stream, and written to ``BENCH_lookup.json`` with a schema-stable record
+layout so future PRs can diff the perf trajectory
+(``benchmarks.bench_diff``):
 
     {"dataset": str, "n": int, "eps": int, "backend": str,
+     "workload": "uniform" | "zipf",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
+
+Zipf records additionally carry ``cache_hit_rate`` (schema-additive).
 
 Pallas interpret mode is a correctness harness, not a timing target, so it
 is measured over a smaller query slice; the recorded number tracks
@@ -29,12 +36,36 @@ from .common import datasets, queries
 EPS_SWEEP = (16, 64, 256)
 OUT_PATH = pathlib.Path("BENCH_lookup.json")
 PALLAS_QUERY_CAP = 8_192
+ZIPF_EPS = 64
+ZIPF_CACHE_SLOTS = 1 << 15
+# best-of-N rejects shared-runner noise; interpret-mode pallas stays at 3
+# (it is a correctness harness, each repeat is expensive)
+REPEATS = {"numpy": 5, "jnp": 5, "pallas": 3}
+
+
+def zipf_queries(keys: np.ndarray, n: int, *, theta: float = 1.2,
+                 absent_frac: float = 0.1, seed: int = 7) -> np.ndarray:
+    """Skewed query stream: Zipf(theta) ranks over the present keys (hot
+    ranks mapped to random key positions so skew is independent of key
+    order) mixed with ~``absent_frac`` absent keys (midpoints between
+    consecutive distinct keys; the fraction is approximate when a midpoint
+    collides with a present key). Deterministic given (keys, n, seed)."""
+    rng = np.random.default_rng(seed)
+    ranks = (rng.zipf(theta, n) - 1) % keys.size
+    perm = rng.permutation(keys.size)
+    q = keys[perm[ranks]]
+    n_abs = int(n * absent_frac)
+    if n_abs:
+        pos = rng.integers(0, keys.size - 1, n_abs)
+        mid = keys[pos] + (keys[pos + 1] - keys[pos]) // np.uint64(2)
+        q[rng.permutation(n)[:n_abs]] = mid
+    return q
 
 
 def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
-    rows.append("serve,dataset,n,eps,backend,ns_per_lookup,build_s,"
-                "size_bytes")
+    rows.append("serve,dataset,n,eps,backend,workload,ns_per_lookup,"
+                "build_s,size_bytes,cache_hit_rate")
     records: list[dict] = []
     for dname, keys in datasets().items():
         q = queries(keys)
@@ -46,15 +77,42 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                 got = svc.lookup(qb, backend=backend)
                 assert np.array_equal(got, want[:qb.size]), (
                     dname, eps, backend, "serve lookup wrong")
-                ns = svc.throughput(qb, backends=(backend,))[backend]
+                ns = svc.throughput(qb, backends=(backend,),
+                                    repeats=REPEATS[backend])[backend]
                 rows.append(f"serve,{dname},{keys.size},{eps},{backend},"
-                            f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes}")
+                            f"uniform,{ns:.1f},{svc.build_s:.3f},"
+                            f"{svc.size_bytes},")
                 records.append({
                     "dataset": dname, "n": int(keys.size), "eps": int(eps),
-                    "backend": backend, "ns_per_lookup": round(float(ns), 1),
+                    "backend": backend, "workload": "uniform",
+                    "ns_per_lookup": round(float(ns), 1),
                     "build_s": round(float(svc.build_s), 4),
                     "size_bytes": int(svc.size_bytes),
                 })
+        # skewed stream through the cached jnp serving path
+        svc = PlexService(keys, eps=ZIPF_EPS, cache_slots=ZIPF_CACHE_SLOTS)
+        qz = zipf_queries(keys, q.size)
+        wz = np.searchsorted(keys, qz, side="left")
+        present = np.isin(qz, keys)
+        got = svc.lookup(qz, backend="jnp")
+        assert np.array_equal(got[present], wz[present]), (
+            dname, "zipf serve lookup wrong")
+        # hit rate from the one cold pass above: intra-stream skew, not the
+        # artificial repetition of the throughput repeats below
+        hit_rate = svc.stats.cache_hit_rate
+        ns = svc.throughput(qz, backends=("jnp",),
+                            repeats=REPEATS["jnp"])["jnp"]
+        rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,zipf,"
+                    f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes},"
+                    f"{hit_rate:.3f}")
+        records.append({
+            "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
+            "backend": "jnp", "workload": "zipf",
+            "ns_per_lookup": round(float(ns), 1),
+            "build_s": round(float(svc.build_s), 4),
+            "size_bytes": int(svc.size_bytes),
+            "cache_hit_rate": round(float(hit_rate), 4),
+        })
     OUT_PATH.write_text(json.dumps(records, indent=1))
     rows.append(f"# serve wrote {OUT_PATH} ({len(records)} records)")
     return rows

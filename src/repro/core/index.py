@@ -109,3 +109,15 @@ class LearnedIndex:
     def lookup(self, q: np.ndarray, backend: str | None = None) -> np.ndarray:
         """First-occurrence index per query key (PLEX.lookup contract)."""
         return self.backend_impl(backend).lookup(q)
+
+    def lookup_planes(self, qhi, qlo, backend: str | None = None):
+        """Async plane-level lookup for accelerated backends.
+
+        One block-shaped chunk of (hi, lo) uint32 query planes -> raw int32
+        device indices, dispatched without blocking (the caller clamps with
+        ``kernels.planes.finalize_indices`` after its one sync point). This
+        is the entry the serving layer's async micro-batch pipeline drives;
+        the numpy reference has no device planes and raises."""
+        if (backend or self.default_backend) == "numpy":
+            raise ValueError("numpy backend has no async plane-level path")
+        return self.backend_impl(backend).lookup_planes(qhi, qlo)

@@ -1,13 +1,25 @@
 """Portable jit-compiled pure-jnp PLEX lookup (CPU/GPU/TPU, no Pallas).
 
 Same pipeline as ``ops.DevicePlex`` — segment lookup (radix | CHT) ->
-window gather -> branchless compare-and-count probe — but expressed as
-plain ``jnp`` on the shared ``PlexPlanes``, so it runs anywhere XLA does.
-The segment math is literally the Pallas kernel bodies
-(``plex_segment_lookup.radix_window_base`` / ``cht_window_base``), which
-keeps the two accelerated backends numerically identical; every search has
-a fixed trip count (one masked sweep, or log2(window) bisect rounds), the
-TPU-friendly form inherited from ``core.plex.bounded_lower_bound``.
+window gather -> eps-window probe — but expressed as plain ``jnp`` on the
+shared ``PlexPlanes``, so it runs anywhere XLA does. The segment math is
+literally the Pallas kernel bodies (``plex_segment_lookup``), which keeps
+the two accelerated backends numerically identical; every search has a
+fixed trip count, the TPU-friendly form inherited from
+``core.plex.bounded_lower_bound``.
+
+The final data probe has two numerically identical modes
+(``plex_segment_lookup.probe_lower_bound``): the branchless count sweep
+(TPU-idiomatic) and a fixed-trip bisect (2-4x faster on CPU, where the
+window-wide gather is memory-bound); ``default_probe_mode`` picks by
+platform.
+
+``StackedJnpPlex`` is the serving hot path: the shard-major fused layout
+(``planes.StackedPlanes``) runs shard routing (predecessor count over the
+shard-minima planes), the full radix->spline->probe pipeline, the per-shard
+result clamp, and the global-offset fold inside **one** jit'd function —
+one dispatch per micro-batch regardless of shard count, with an optional
+device-side hot-key result cache threaded through as explicit state.
 
 Batches are processed in fixed ``block``-shaped chunks so XLA compiles the
 pipeline exactly once per index regardless of batch size.
@@ -16,20 +28,30 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.plex import PLEX
-from .pairs import extract_bits, pair_lt, split_u64
-from .planes import (PlexPlanes, build_planes, finalize_indices, pad_queries)
+from .pairs import extract_bits, pair_le, split_u64
+from .planes import (PlexPlanes, StackedPlanes, build_planes,
+                     build_stacked_planes, finalize_indices, pad_queries)
 from .plex_segment_lookup import (DEFAULT_BLOCK, cht_window_base,
-                                  radix_window_base)
+                                  probe_lower_bound, radix_window_base,
+                                  stacked_cht_window_base,
+                                  stacked_radix_window_base)
+
+PROBE_MODES = ("count", "bisect")
 
 
-def _jnp_pipeline(pp: PlexPlanes, qhi, qlo):
+def default_probe_mode() -> str:
+    """Count sweep on vector-unit backends, bisect on cache-hierarchy ones."""
+    return "bisect" if jax.default_backend() == "cpu" else "count"
+
+
+def _jnp_pipeline(pp: PlexPlanes, probe: str, qhi, qlo):
     s = pp.static
     n_spline = pp.skhi.shape[0]
     if pp.kind == "radix":
@@ -47,12 +69,8 @@ def _jnp_pipeline(pp: PlexPlanes, qhi, qlo):
             pp.spos, r=s["r"], levels=s["levels"], delta=s["delta"],
             n_spline=n_spline, eps_eff=pp.eps_eff, n_data=pp.n_data,
             window=pp.window, mode=s["mode"])
-    offs = jnp.arange(pp.window, dtype=jnp.int32)
-    idx = base[:, None] + offs[None, :]
-    whi = jnp.take(pp.dhi, idx)
-    wlo = jnp.take(pp.dlo, idx)
-    lt = pair_lt(whi, wlo, qhi[:, None], qlo[:, None])
-    return base + jnp.sum(lt.astype(jnp.int32), axis=1)
+    return probe_lower_bound(qhi, qlo, pp.dhi, pp.dlo, base,
+                             window=pp.window, mode=probe)
 
 
 @dataclasses.dataclass
@@ -62,11 +80,15 @@ class JnpPlex:
 
     planes: PlexPlanes
     block: int
+    probe: str = "count"
     _fn: Any = None
 
     @classmethod
     def from_plex(cls, px: PLEX, *, block: int = DEFAULT_BLOCK,
-                  device=None) -> "JnpPlex":
+                  device=None, probe: str | None = None) -> "JnpPlex":
+        probe = probe or default_probe_mode()
+        if probe not in PROBE_MODES:
+            raise ValueError(f"unknown probe mode {probe!r}")
         pp = build_planes(px)
         if device is not None:
             put = functools.partial(jax.device_put, device=device)
@@ -74,20 +96,165 @@ class JnpPlex:
                 pp, skhi=put(pp.skhi), sklo=put(pp.sklo), spos=put(pp.spos),
                 dhi=put(pp.dhi), dlo=put(pp.dlo),
                 layer_arrays={k: put(v) for k, v in pp.layer_arrays.items()})
-        jp = cls(planes=pp, block=block)
-        jp._fn = jax.jit(functools.partial(_jnp_pipeline, pp))
+        jp = cls(planes=pp, block=block, probe=probe)
+        jp._fn = jax.jit(functools.partial(_jnp_pipeline, pp, probe))
         return jp
 
     def lookup_planes(self, qhi, qlo):
         """One [block]-shaped chunk of query planes -> raw int32 indices
-        (may exceed ``n_real`` for past-the-end absent keys; callers clamp)."""
+        (may exceed ``n_real`` for past-the-end absent keys; callers clamp).
+        Dispatches asynchronously: the result is a device array."""
         return self._fn(qhi, qlo)
 
     def lookup(self, q: np.ndarray) -> np.ndarray:
         """Batched lookup; same contract as PLEX.lookup for present keys."""
         qp, b = pad_queries(q, self.block)
         qh, ql = split_u64(qp)
-        outs = [np.asarray(self._fn(jnp.asarray(qh[i:i + self.block]),
-                                    jnp.asarray(ql[i:i + self.block])))
+        # dispatch every chunk eagerly, sync once at np.concatenate
+        outs = [self._fn(jnp.asarray(qh[i:i + self.block]),
+                         jnp.asarray(ql[i:i + self.block]))
                 for i in range(0, qp.size, self.block)]
-        return finalize_indices(np.concatenate(outs), b, self.planes.n_real)
+        return finalize_indices(np.concatenate([np.asarray(o) for o in outs]),
+                                b, self.planes.n_real)
+
+
+def _route(sp: StackedPlanes, qhi, qlo):
+    """Shard id per query: predecessor count over the shard-minima planes
+    (== host-side ``searchsorted(shard_min, q, 'right') - 1``, clipped)."""
+    if sp.n_shards == 1:
+        return jnp.zeros(qhi.shape, jnp.int32)
+    le = pair_le(sp.min_hi[None, :], sp.min_lo[None, :],
+                 qhi[:, None], qlo[:, None])
+    cnt = jnp.sum(le.astype(jnp.int32), axis=1)
+    return jnp.clip(cnt - 1, 0, sp.n_shards - 1)
+
+
+def _stacked_pipeline(sp: StackedPlanes, probe: str, qhi, qlo):
+    """Route + segment + probe + clamp + global-offset fold, one dispatch.
+
+    Returns global int32 first-occurrence indices (already clamped to each
+    shard's real key count and shifted by its global offset) — the host
+    only strips padding lanes.
+    """
+    sid = _route(sp, qhi, qlo)
+    s = sp.static
+    la = sp.layer_arrays
+    if sp.kind == "radix":
+        base = stacked_radix_window_base(
+            qhi, qlo, sid, la["table"], la["table_off"], la["shift"],
+            la["p_max"], la["lmin_hi"], la["lmin_lo"], sp.skhi, sp.sklo,
+            sp.spos, sp.n_spline, n_spline_max=sp.n_spline_max,
+            max_win=s["max_win"], eps_eff=sp.eps_eff,
+            n_data_max=sp.n_data_max, window=sp.window, mode=s["mode"])
+    else:
+        bins = jnp.stack([extract_bits(qhi, qlo, lvl * s["r"], s["r"])
+                          for lvl in range(s["levels"])])
+        base = stacked_cht_window_base(
+            qhi, qlo, sid, bins, la["cells"], la["cells_off"], la["delta"],
+            sp.skhi, sp.sklo, sp.spos, sp.n_spline,
+            r=s["r"], levels=s["levels"], delta_max=s["delta_max"],
+            n_spline_max=sp.n_spline_max, eps_eff=sp.eps_eff,
+            n_data_max=sp.n_data_max, window=sp.window, mode=s["mode"])
+    row = sid * jnp.int32(sp.n_data_max)
+    got = probe_lower_bound(qhi, qlo, sp.dhi, sp.dlo, row + base,
+                            window=sp.window, mode=probe)
+    local = jnp.minimum(got - row, jnp.take(sp.n_real, sid))
+    return local + jnp.take(sp.row_off, sid)
+
+
+def _cache_slot(qhi, qlo, n_slots: int):
+    """Direct-mapped slot per query: a 32-bit multiplicative mix of both key
+    words, masked to the power-of-two capacity."""
+    h = (qlo * jnp.uint32(0x9E3779B1)) ^ (qhi * jnp.uint32(0x85EBCA77))
+    h ^= h >> 16
+    return (h & jnp.uint32(n_slots - 1)).astype(jnp.int32)
+
+
+_CACHE_EMPTY = 0xFFFFFFFF   # sentinel value row; real indices are < 2^31
+
+
+def _stacked_cached(sp: StackedPlanes, probe: str, qhi, qlo, cache):
+    """Stacked pipeline + device-side hot-key result cache.
+
+    The cache is explicit state threaded through every micro-batch: one
+    uint32 [3, n_slots] array (rows: key hi, key lo, cached global index;
+    value ``_CACHE_EMPTY`` marks an empty slot). Hits select the cached
+    index; every lane write-through inserts its (key, result) as a single
+    whole-column scatter, so a colliding batch can never tear a slot's
+    (key, value) pair even where duplicate-scatter order is unspecified.
+    In the fixed-shape branchless pipeline a hit cannot yet skip lane
+    compute — results are bit-identical with and without the cache — so
+    the measured per-batch hit count is the deliverable: it tells a
+    skew-aware deployment what a compacting cache would save. Returns
+    (results, new cache, hit count).
+    """
+    out = _stacked_pipeline(sp, probe, qhi, qlo)
+    slot = _cache_slot(qhi, qlo, cache.shape[1])
+    ckhi, cklo, cval = (jnp.take(cache[0], slot), jnp.take(cache[1], slot),
+                        jnp.take(cache[2], slot))
+    hit = (cval != jnp.uint32(_CACHE_EMPTY)) & (ckhi == qhi) & (cklo == qlo)
+    res = jnp.where(hit, cval.astype(jnp.int32), out)
+    new = cache.at[:, slot].set(
+        jnp.stack([qhi, qlo, res.astype(jnp.uint32)]))
+    return res, new, jnp.sum(hit.astype(jnp.int32))
+
+
+@dataclasses.dataclass
+class StackedJnpPlex:
+    """Single-dispatch multi-shard lookup over ``StackedPlanes``."""
+
+    planes: StackedPlanes
+    block: int
+    probe: str
+    cache_slots: int = 0
+    _fn: Any = None
+    _cached_fn: Any = None
+    _cache: Any = None        # uint32 [3, n_slots] device array or None
+
+    @classmethod
+    def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
+                    block: int = DEFAULT_BLOCK, probe: str | None = None,
+                    cache_slots: int = 0) -> "StackedJnpPlex | None":
+        """Build the fused stacked path, or ``None`` when the shards' static
+        parameters cannot be unified (the caller falls back to per-shard
+        dispatch)."""
+        probe = probe or default_probe_mode()
+        if probe not in PROBE_MODES:
+            raise ValueError(f"unknown probe mode {probe!r}")
+        if cache_slots and cache_slots & (cache_slots - 1):
+            raise ValueError("cache_slots must be a power of two")
+        sp = build_stacked_planes(plexes, row_off)
+        if sp is None:
+            return None
+        st = cls(planes=sp, block=block, probe=probe,
+                 cache_slots=int(cache_slots))
+        st._fn = jax.jit(functools.partial(_stacked_pipeline, sp, probe))
+        if cache_slots:
+            st._cached_fn = jax.jit(
+                functools.partial(_stacked_cached, sp, probe))
+            st._cache = jnp.full((3, cache_slots), _CACHE_EMPTY, jnp.uint32)
+        return st
+
+    @property
+    def n_real_total(self) -> int:
+        return self.planes.n_real_total
+
+    def lookup_planes(self, qhi, qlo):
+        """One [block]-shaped chunk of query planes -> (global int32
+        indices, device hit count | None). Dispatches asynchronously and
+        advances the cache state."""
+        if self._cached_fn is not None:
+            out, self._cache, hits = self._cached_fn(qhi, qlo, self._cache)
+            return out, hits
+        return self._fn(qhi, qlo), None
+
+    def lookup(self, q: np.ndarray) -> np.ndarray:
+        """Batched global lookup (convenience; the serving layer drives
+        ``lookup_planes`` directly for the async pipeline)."""
+        qp, b = pad_queries(q, self.block)
+        qh, ql = split_u64(qp)
+        outs = [self.lookup_planes(jnp.asarray(qh[i:i + self.block]),
+                                   jnp.asarray(ql[i:i + self.block]))[0]
+                for i in range(0, qp.size, self.block)]
+        return np.concatenate([np.asarray(o) for o in outs])[:b].astype(
+            np.int64)

@@ -65,11 +65,19 @@ class DevicePlex:
         dp._fn = jax.jit(functools.partial(_lookup_pipeline, dp))
         return dp
 
+    def lookup_planes(self, qhi, qlo):
+        """One block-multiple chunk of query planes -> raw int32 indices
+        (may exceed ``n_real``; callers clamp). Dispatches asynchronously:
+        the result is a device array. Same entry contract as
+        ``JnpPlex.lookup_planes``, so the serving layer can drive either
+        accelerated backend through one async micro-batch pipeline."""
+        return self._fn(jnp.asarray(qhi), jnp.asarray(qlo))
+
     def lookup(self, q: np.ndarray) -> np.ndarray:
         """Batched device lookup; same contract as PLEX.lookup."""
         qp, b = pad_queries(q, self.block)
         qh, ql = split_u64(qp)
-        out = self._fn(jnp.asarray(qh), jnp.asarray(ql))
+        out = self.lookup_planes(qh, ql)
         return finalize_indices(out, b, self.n_real)
 
 

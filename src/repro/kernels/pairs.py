@@ -50,6 +50,24 @@ def pair_shr(hi, lo, s: int):
     return jnp.zeros_like(hi), hi >> (s - 32)
 
 
+def pair_shr_dyn(hi, lo, s):
+    """Low 32 bits of ``(hi, lo) >> s`` for a *traced* per-element shift
+    ``s`` (int32/uint32 array, 0 <= s < 64).
+
+    The stacked multi-shard lookup gathers each query's radix ``shift`` from
+    a per-shard plane, so the shift amount is data, not a static kwarg.
+    Shift amounts are kept in [0, 31] on uint32 operands (XLA leaves >= 32
+    undefined); the s == 0 cross-word carry is masked out explicitly.
+    Callers only need the low word: a radix prefix has r <= 24 bits.
+    """
+    s = s.astype(jnp.uint32)
+    wide = s >= jnp.uint32(32)
+    sa = jnp.where(wide, s - jnp.uint32(32), s)          # 0..31 either way
+    carry = jnp.where(sa == 0, jnp.uint32(0),
+                      hi << ((jnp.uint32(32) - sa) & jnp.uint32(31)))
+    return jnp.where(wide, hi >> sa, (lo >> sa) | carry)
+
+
 def pair_to_f32(hi, lo):
     """Approximate float32 value of a u64 pair (used for interpolation
     deltas; the eps-window slack absorbs the rounding, ops.py computes it)."""

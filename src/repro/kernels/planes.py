@@ -7,11 +7,39 @@ search parameters (eps slack, window geometry, layer mode). Both the Pallas
 pipeline (``ops.DevicePlex``) and the portable pure-jnp pipeline
 (``jnp_lookup.JnpPlex``) consume the same ``PlexPlanes``, so their numeric
 contracts agree by construction.
+
+Stacked layout (multi-shard serving)
+------------------------------------
+``build_stacked_planes`` fuses the planes of *several* shard-local PLEX
+indexes into one shard-major device layout so a whole routed batch runs
+through a single jit'd pipeline (one dispatch per micro-batch, no per-shard
+Python loop). Layout decision, recorded here because every stacked kernel
+depends on it:
+
+* Per-shard planes are padded to the max shard size and stored **flattened
+  row-major** (``[n_shards * n_spline_max]`` / ``[n_shards * n_data_max]``),
+  so a query routed to shard ``s`` gathers with one flat index
+  ``s * row_len + local_idx`` — the same ``jnp.take`` the single-shard
+  kernel bodies already use, which is what lets
+  ``plex_segment_lookup.radix_window_base`` / ``cht_window_base`` serve both
+  layouts.
+* Spline/data pads are the max u64 key (never counted by the ``< q`` probe;
+  count-mode gathers are clamped to the per-shard real length anyway), and
+  the rank-plane pad repeats the last rank (never read: segments are clamped
+  to ``n_spline_s - 2`` before interpolation).
+* Static kernel parameters are **unified** across shards: window geometry
+  takes the max (a wider-than-needed window is still correct — the probe
+  counts, it does not bisect to an edge), while genuinely per-shard scalars
+  (radix ``shift``/``min_key``/table extent, CHT ``delta``) become [S]
+  parameter planes gathered per query. Shards whose layers cannot be
+  unified (mixed radix/CHT kinds, or CHT shards with different radix
+  widths) are rejected — ``build_stacked_planes`` returns ``None`` and the
+  serving layer falls back to per-shard dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -22,6 +50,8 @@ from ..core.radix_table import RadixTable
 from .pairs import split_u64
 
 COUNT_MODE_MAX = 512    # windows at most this wide use compare-and-count
+
+_U64_MAX = np.iinfo(np.uint64).max
 
 
 def round_up(x: int, m: int) -> int:
@@ -67,8 +97,26 @@ class PlexPlanes:
     window: int
 
 
-def build_planes(px: PLEX) -> PlexPlanes:
-    """Host PLEX -> device planes + static search parameters.
+@dataclasses.dataclass
+class _HostPlanes:
+    """Host-side (numpy) planes + static params for one PLEX; the shared
+    intermediate of the single-index and stacked builders."""
+    skh: np.ndarray
+    skl: np.ndarray
+    spos: np.ndarray
+    dh: np.ndarray
+    dl: np.ndarray
+    n_data: int
+    n_real: int
+    kind: str
+    layer_np: dict[str, np.ndarray]
+    static: dict[str, Any]
+    eps_eff: int
+    window: int
+
+
+def _host_planes(px: PLEX) -> _HostPlanes:
+    """Host PLEX -> host plane arrays + static search parameters.
 
     Float32 interpolation cannot reproduce the host's float64 predictions
     bit-for-bit, so the eps window is widened by a statically-computed
@@ -89,13 +137,13 @@ def build_planes(px: PLEX) -> PlexPlanes:
 
     n_real = px.keys.size
     n_pad = max(round_up(n_real, 128), window)
-    pad = np.full(n_pad - n_real, np.iinfo(np.uint64).max, dtype=np.uint64)
+    pad = np.full(n_pad - n_real, _U64_MAX, dtype=np.uint64)
     dh, dl = split_u64(np.concatenate([px.keys, pad]))
 
     if isinstance(px.layer, RadixTable):
         kind = "radix"
         mk = int(px.layer.min_key)
-        layer_arrays = {"table": jnp.asarray(px.layer.table)}
+        layer_np = {"table": np.asarray(px.layer.table)}
         max_win = px.layer.max_window
         static = dict(shift=int(px.layer.shift), r=int(px.layer.r),
                       min_hi=(mk >> 32) & 0xFFFFFFFF,
@@ -106,14 +154,152 @@ def build_planes(px: PLEX) -> PlexPlanes:
     else:
         assert isinstance(px.layer, CHT)
         kind = "cht"
-        layer_arrays = {"cells": jnp.asarray(px.layer.cells)}
+        layer_np = {"cells": np.asarray(px.layer.cells)}
         static = dict(r=int(px.layer.r),
                       levels=int(px.layer.max_depth) + 1,
                       delta=int(px.layer.delta),
                       mode="count" if px.layer.delta + 1 <= COUNT_MODE_MAX
                       else "bisect")
-    return PlexPlanes(skhi=jnp.asarray(skh), sklo=jnp.asarray(skl),
-                      spos=jnp.asarray(spos), dhi=jnp.asarray(dh),
-                      dlo=jnp.asarray(dl), n_data=n_pad, n_real=n_real,
-                      kind=kind, layer_arrays=layer_arrays, static=static,
-                      eps_eff=eps_eff, window=window)
+    return _HostPlanes(skh=skh, skl=skl, spos=spos, dh=dh, dl=dl,
+                       n_data=n_pad, n_real=n_real, kind=kind,
+                       layer_np=layer_np, static=static, eps_eff=eps_eff,
+                       window=window)
+
+
+def build_planes(px: PLEX) -> PlexPlanes:
+    """Host PLEX -> device planes + static search parameters."""
+    hp = _host_planes(px)
+    return PlexPlanes(skhi=jnp.asarray(hp.skh), sklo=jnp.asarray(hp.skl),
+                      spos=jnp.asarray(hp.spos), dhi=jnp.asarray(hp.dh),
+                      dlo=jnp.asarray(hp.dl), n_data=hp.n_data,
+                      n_real=hp.n_real, kind=hp.kind,
+                      layer_arrays={k: jnp.asarray(v)
+                                    for k, v in hp.layer_np.items()},
+                      static=hp.static, eps_eff=hp.eps_eff, window=hp.window)
+
+
+@dataclasses.dataclass
+class StackedPlanes:
+    """Shard-major fused planes of several shard-local PLEX indexes.
+
+    Row-flattened per-shard planes plus [S] parameter planes; consumed by
+    the single-dispatch stacked pipeline in ``jnp_lookup.StackedJnpPlex``
+    (see the module docstring for the layout decision).
+    """
+    # spline planes, [S * n_spline_max] row-major flat
+    skhi: Any
+    sklo: Any
+    spos: Any
+    # data planes, [S * n_data_max] row-major flat
+    dhi: Any
+    dlo: Any
+    # per-shard geometry planes, [S]
+    n_spline: Any             # int32 real spline points per shard
+    n_real: Any               # int32 real keys per shard
+    row_off: Any              # int32 global key offset per shard
+    min_hi: Any               # uint32 routing plane: first key per shard
+    min_lo: Any
+    # shapes / unified statics
+    n_shards: int
+    n_spline_max: int
+    n_data_max: int
+    n_real_total: int
+    kind: str                 # "radix" | "cht"
+    layer_arrays: dict[str, Any]
+    static: dict[str, Any]
+    eps_eff: int              # max over shards
+    window: int               # max over shards
+
+
+def build_stacked_planes(plexes: Sequence[PLEX],
+                         row_off: np.ndarray) -> StackedPlanes | None:
+    """Fuse shard-local PLEX indexes into one ``StackedPlanes``.
+
+    ``row_off[s]`` is shard ``s``'s global key offset (the serving layer's
+    shard table). Returns ``None`` when the shards' layers cannot be
+    unified under one jit'd pipeline: mixed layer kinds, CHT shards with
+    different radix widths, or a global key count past int32 range (the
+    on-device global index plane is int32).
+    """
+    hps = [_host_planes(px) for px in plexes]
+    kinds = {hp.kind for hp in hps}
+    if len(kinds) != 1:
+        return None
+    kind = kinds.pop()
+    if kind == "cht" and len({hp.static["r"] for hp in hps}) != 1:
+        return None
+    n_real_total = int(row_off[-1]) + hps[-1].n_real
+    if n_real_total >= (1 << 31):
+        return None
+
+    s_count = len(hps)
+    eps_eff = max(hp.eps_eff for hp in hps)
+    window = max(hp.window for hp in hps)
+    n_spline_max = max(hp.skh.size for hp in hps)
+    n_data_max = max(max(hp.n_data for hp in hps), window)
+
+    def pad_to(a: np.ndarray, n: int, fill) -> np.ndarray:
+        out = np.full(n, fill, dtype=a.dtype)
+        out[:a.size] = a
+        return out
+
+    skh = np.stack([pad_to(hp.skh, n_spline_max, 0xFFFFFFFF) for hp in hps])
+    skl = np.stack([pad_to(hp.skl, n_spline_max, 0xFFFFFFFF) for hp in hps])
+    spos = np.stack([pad_to(hp.spos, n_spline_max, hp.spos[-1])
+                     for hp in hps])
+    dh = np.stack([pad_to(hp.dh, n_data_max, 0xFFFFFFFF) for hp in hps])
+    dl = np.stack([pad_to(hp.dl, n_data_max, 0xFFFFFFFF) for hp in hps])
+
+    mins = np.asarray([px.keys[0] for px in plexes], dtype=np.uint64)
+    min_hi, min_lo = split_u64(mins)
+
+    if kind == "radix":
+        tables = [hp.layer_np["table"] for hp in hps]
+        sizes = np.asarray([t.size for t in tables], dtype=np.int64)
+        table_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        max_win = max(hp.static["max_win"] for hp in hps)
+        layer_arrays = {
+            "table": jnp.asarray(np.concatenate(tables)),
+            "table_off": jnp.asarray(table_off.astype(np.int32)),
+            "shift": jnp.asarray(
+                np.asarray([hp.static["shift"] for hp in hps], np.int32)),
+            "p_max": jnp.asarray(
+                np.asarray([(1 << hp.static["r"]) - 1 for hp in hps],
+                           np.int32)),
+            "lmin_hi": jnp.asarray(
+                np.asarray([hp.static["min_hi"] for hp in hps], np.uint32)),
+            "lmin_lo": jnp.asarray(
+                np.asarray([hp.static["min_lo"] for hp in hps], np.uint32)),
+        }
+        static = dict(max_win=int(max_win),
+                      mode="count" if max_win <= COUNT_MODE_MAX
+                      else "bisect")
+    else:
+        cells = [hp.layer_np["cells"] for hp in hps]
+        sizes = np.asarray([c.size for c in cells], dtype=np.int64)
+        cells_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        delta_max = max(hp.static["delta"] for hp in hps)
+        layer_arrays = {
+            "cells": jnp.asarray(np.concatenate(cells)),
+            "cells_off": jnp.asarray(cells_off.astype(np.int32)),
+            "delta": jnp.asarray(
+                np.asarray([hp.static["delta"] for hp in hps], np.int32)),
+        }
+        static = dict(r=int(hps[0].static["r"]),
+                      levels=max(hp.static["levels"] for hp in hps),
+                      delta_max=int(delta_max),
+                      mode="count" if delta_max + 1 <= COUNT_MODE_MAX
+                      else "bisect")
+
+    return StackedPlanes(
+        skhi=jnp.asarray(skh.reshape(-1)), sklo=jnp.asarray(skl.reshape(-1)),
+        spos=jnp.asarray(spos.reshape(-1)), dhi=jnp.asarray(dh.reshape(-1)),
+        dlo=jnp.asarray(dl.reshape(-1)),
+        n_spline=jnp.asarray(
+            np.asarray([hp.skh.size for hp in hps], np.int32)),
+        n_real=jnp.asarray(np.asarray([hp.n_real for hp in hps], np.int32)),
+        row_off=jnp.asarray(np.asarray(row_off, np.int32)),
+        min_hi=jnp.asarray(min_hi), min_lo=jnp.asarray(min_lo),
+        n_shards=s_count, n_spline_max=n_spline_max, n_data_max=n_data_max,
+        n_real_total=n_real_total, kind=kind, layer_arrays=layer_arrays,
+        static=static, eps_eff=eps_eff, window=window)

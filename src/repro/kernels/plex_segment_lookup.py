@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .pairs import pair_le, pair_shr, pair_sub, pair_to_f32
+from .pairs import pair_le, pair_lt, pair_shr, pair_shr_dyn, pair_sub, \
+    pair_to_f32
 
 DEFAULT_BLOCK = 512
 
@@ -56,10 +57,14 @@ def _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline):
     y0 = jnp.take(spos, seg)
     y1 = jnp.take(spos, seg + 1)
     dxh, dxl = pair_sub(x1h, x1l, x0h, x0l)
-    # clamp q to segment start (q >= x0 by construction of the search)
+    # clamp q to segment start: q >= x0 by construction of the search for
+    # present keys, but an absent key below the first spline key would wrap
+    # the unsigned subtraction (the host reference extrapolates in signed
+    # float64; snapping t to 0 keeps the prediction at the segment start)
     dqh, dql = pair_sub(qhi, qlo, x0h, x0l)
     dx = jnp.maximum(pair_to_f32(dxh, dxl), jnp.float32(1.0))
-    dq = pair_to_f32(dqh, dql)
+    dq = jnp.where((qhi < x0h) | ((qhi == x0h) & (qlo < x0l)),
+                   jnp.float32(0.0), pair_to_f32(dqh, dql))
     t = jnp.clip(dq / dx, 0.0, 1.0)
     return y0 + t * (y1 - y0)
 
@@ -104,6 +109,138 @@ def radix_window_base(qhi, qlo, table, skhi, sklo, spos, *, shift, r, min_hi,
     pred = _interp(qhi, qlo, skhi, sklo, spos, seg, n_spline)
     base = jnp.floor(pred).astype(jnp.int32) - eps_eff
     return jnp.clip(base, 0, n_data - window)
+
+
+def stacked_radix_window_base(qhi, qlo, sid, table, table_off, shift, p_max,
+                              lmin_hi, lmin_lo, skhi, sklo, spos, n_spline,
+                              *, n_spline_max, max_win, eps_eff, n_data_max,
+                              window, mode):
+    """Shard-stacked radix pipeline: routed queries -> *local* window bases.
+
+    Same math as ``radix_window_base`` (shared ``_predecessor_count`` /
+    ``_interp`` bodies), but every per-shard static scalar becomes an [S]
+    parameter plane gathered by ``sid``, and spline gathers address the
+    row-flattened stacked planes at ``sid * n_spline_max + local``
+    (layout decision in ``planes.py``). ``shift`` is traced data here, hence
+    ``pair_shr_dyn``.
+    """
+    mh = jnp.take(lmin_hi, sid)
+    ml = jnp.take(lmin_lo, sid)
+    below = (qhi < mh) | ((qhi == mh) & (qlo < ml))
+    dh, dl = pair_sub(qhi, qlo, mh, ml)
+    dh = jnp.where(below, jnp.uint32(0), dh)
+    dl = jnp.where(below, jnp.uint32(0), dl)
+    pfx = pair_shr_dyn(dh, dl, jnp.take(shift, sid))
+    # clip below 0 too: a huge absent query on a small-shift shard can wrap
+    # the int32 cast negative, which would gather from another shard's table
+    p = jnp.clip(pfx.astype(jnp.int32), 0, jnp.take(p_max, sid))
+    toff = jnp.take(table_off, sid)
+    lo = jnp.maximum(jnp.take(table, toff + p).astype(jnp.int32) - 1, 0)
+    hi = jnp.maximum(jnp.take(table, toff + p + 1).astype(jnp.int32) - 1, 0)
+
+    ns = jnp.take(n_spline, sid)
+    row = sid * jnp.int32(n_spline_max)
+    if mode == "count":
+        offs = jax.lax.broadcasted_iota(jnp.int32, (qhi.shape[0], max_win), 1)
+        idx = row[:, None] + jnp.minimum(lo[:, None] + offs, (ns - 1)[:, None])
+        wh = jnp.take(skhi, idx)
+        wl = jnp.take(sklo, idx)
+        seg = _predecessor_count(qhi, qlo, wh, wl, lo, hi)
+    else:  # bisect: fixed-trip bounded binary search
+        trips = max(int(max_win - 1).bit_length(), 0)
+        for _ in range(trips):
+            mid = (lo + hi + 1) >> 1
+            g = row + jnp.minimum(mid, ns - 1)
+            go = pair_le(jnp.take(skhi, g), jnp.take(sklo, g), qhi, qlo)
+            lo = jnp.where(go, mid, lo)
+            hi = jnp.where(go, hi, mid - 1)
+        seg = lo
+
+    seg = row + jnp.clip(seg, 0, ns - 2)
+    pred = _interp(qhi, qlo, skhi, sklo, spos, seg, skhi.shape[0])
+    base = jnp.floor(pred).astype(jnp.int32) - eps_eff
+    return jnp.clip(base, 0, n_data_max - window)
+
+
+def stacked_cht_window_base(qhi, qlo, sid, bins, cells, cells_off, delta,
+                            skhi, sklo, spos, n_spline, *, r, levels,
+                            delta_max, n_spline_max, eps_eff, n_data_max,
+                            window, mode):
+    """Shard-stacked CHT pipeline (see ``stacked_radix_window_base``).
+
+    Shards must share the radix width ``r`` (the unification gate in
+    ``planes.build_stacked_planes``); ``levels`` is the deepest shard's
+    level count — shallower shards finish their descent early and the extra
+    unrolled rounds are masked no-ops, gathering a last valid in-shard cell.
+    """
+    fanout = jnp.int32(1 << r)
+    coff = jnp.take(cells_off, sid)
+    node = jnp.zeros(qhi.shape, jnp.int32)
+    out = jnp.zeros(qhi.shape, jnp.int32)
+    done = jnp.zeros(qhi.shape, jnp.bool_)
+    for level in range(levels):            # static unroll: levels <= ~12
+        cell = jnp.take(cells, coff + node * fanout + bins[level])
+        is_child = (cell >> 31) != 0
+        val = (cell & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        newly = jnp.logical_and(~done, ~is_child)
+        out = jnp.where(newly, val, out)
+        node = jnp.where(jnp.logical_and(~done, is_child), val, node)
+        done = jnp.logical_or(done, ~is_child)
+
+    ns = jnp.take(n_spline, sid)
+    row = sid * jnp.int32(n_spline_max)
+    lo = out
+    hi = jnp.minimum(out + jnp.take(delta, sid), ns - 1)
+    if mode == "count":
+        width = delta_max + 1
+        offs = jax.lax.broadcasted_iota(jnp.int32, (qhi.shape[0], width), 1)
+        idx = row[:, None] + jnp.minimum(lo[:, None] + offs, (ns - 1)[:, None])
+        wh = jnp.take(skhi, idx)
+        wl = jnp.take(sklo, idx)
+        seg = _predecessor_count(qhi, qlo, wh, wl, lo, hi)
+    else:
+        trips = max(int(delta_max).bit_length(), 0)
+        for _ in range(trips):
+            mid = (lo + hi + 1) >> 1
+            g = row + jnp.minimum(mid, ns - 1)
+            go = pair_le(jnp.take(skhi, g), jnp.take(sklo, g), qhi, qlo)
+            lo = jnp.where(go, mid, lo)
+            hi = jnp.where(go, hi, mid - 1)
+        seg = lo
+
+    seg = row + jnp.clip(seg, 0, ns - 2)
+    pred = _interp(qhi, qlo, skhi, sklo, spos, seg, skhi.shape[0])
+    base = jnp.floor(pred).astype(jnp.int32) - eps_eff
+    return jnp.clip(base, 0, n_data_max - window)
+
+
+def probe_lower_bound(qhi, qlo, dhi, dlo, base, *, window, mode):
+    """Final eps-window data probe: first index in ``[base, base + window]``
+    whose key is >= q (``base + window`` when every window key is < q).
+
+    Two numerically identical forms, selected statically:
+      * "count": branchless masked compare-and-popcount over the whole
+        window — one vectorised sweep, the TPU-idiomatic form.
+      * "bisect": fixed-trip bounded binary search, ceil(log2(window + 1))
+        single-element gather rounds — wins on cache-hierarchy backends
+        (CPU) where the count sweep's window-wide gather is memory-bound.
+    """
+    if mode == "count":
+        offs = jnp.arange(window, dtype=jnp.int32)
+        idx = base[:, None] + offs[None, :]
+        whi = jnp.take(dhi, idx)
+        wlo = jnp.take(dlo, idx)
+        lt = pair_lt(whi, wlo, qhi[:, None], qlo[:, None])
+        return base + jnp.sum(lt.astype(jnp.int32), axis=1)
+    lo = base
+    hi = base + window - 1
+    trips = int(window).bit_length()       # ceil(log2(window + 1)) candidates
+    for _ in range(trips):
+        mid = (lo + hi) >> 1
+        ge = ~pair_lt(jnp.take(dhi, mid), jnp.take(dlo, mid), qhi, qlo)
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    return lo
 
 
 def _radix_body(qhi_ref, qlo_ref, table_ref, skhi_ref, sklo_ref, spos_ref,

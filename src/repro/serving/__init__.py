@@ -1,6 +1,7 @@
 from .engine import ServeEngine
 from .kv_cache import PagedKVStore, PageTable
-from .plex_service import PlexService, ServiceStats, service_mesh
+from .plex_service import (LookupTicket, PlexService, ServiceStats,
+                           service_mesh)
 
-__all__ = ["PagedKVStore", "PageTable", "PlexService", "ServeEngine",
-           "ServiceStats", "service_mesh"]
+__all__ = ["LookupTicket", "PagedKVStore", "PageTable", "PlexService",
+           "ServeEngine", "ServiceStats", "service_mesh"]

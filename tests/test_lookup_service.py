@@ -130,9 +130,15 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     rows = sb.run()
     assert any(r.startswith("serve,tiny,") for r in rows)
     records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
-    assert len(records) == len(BACKENDS)
+    # one uniform record per backend + one zipf record (cached jnp path)
+    assert len(records) == len(BACKENDS) + 1
+    base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
+            "build_s", "size_bytes"}
     for rec in records:
-        assert set(rec) == {"dataset", "n", "eps", "backend",
-                            "ns_per_lookup", "build_s", "size_bytes"}
+        want = base | ({"cache_hit_rate"} if rec["workload"] == "zipf"
+                       else set())
+        assert set(rec) == want
         assert rec["n"] == keys.size
         assert rec["ns_per_lookup"] > 0
+    zipf = [r for r in records if r["workload"] == "zipf"]
+    assert len(zipf) == 1 and 0.0 <= zipf[0]["cache_hit_rate"] <= 1.0
