@@ -3,11 +3,13 @@
 
     python -m benchmarks.bench_diff OLD.json NEW.json [--threshold 0.15]
 
-Records are matched on (dataset, n, eps, backend, workload); a matched
-record whose ``ns_per_lookup`` grew by more than ``--threshold`` (default
-15%) is a regression and the exit code is non-zero. Records present on only
-one side (new datasets, schema-additive fields, removed sweeps) are listed
-but never fail the diff — the trajectory file is allowed to grow.
+Records are matched on (dataset, n, eps, backend, workload, write_frac —
+the last only set for ``update_mix`` records, so differently-mixed sweeps
+never collide); a matched record whose ``ns_per_lookup`` grew by more than
+``--threshold`` (default 15%) is a regression and the exit code is
+non-zero. Records present on only one side (new datasets, schema-additive
+fields, removed sweeps) are listed but never fail the diff — the
+trajectory file is allowed to grow.
 
 CI wires this against the previous run's cached artifact when one exists
 (see ``.github/workflows/ci.yml``); it is also handy locally:
@@ -28,7 +30,7 @@ Key = tuple
 
 def _key(rec: dict) -> Key:
     return (rec["dataset"], rec["n"], rec["eps"], rec["backend"],
-            rec.get("workload", "uniform"))
+            rec.get("workload", "uniform"), rec.get("write_frac", -1.0))
 
 
 def load(path: str | pathlib.Path) -> dict[Key, dict]:

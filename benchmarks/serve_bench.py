@@ -5,17 +5,22 @@ PlexService and measures best-of-repeats ns/lookup through each backend
 (numpy reference, jit'd jnp, Pallas-interpret). A Zipfian skewed workload
 (``zipf_queries``: hot present keys + a configurable absent-key fraction)
 is additionally measured through the jnp serving path with the device-side
-hot-key cache enabled, reporting the measured hit rate. Results are
-verified against np.searchsorted before timing, appended to the CSV row
-stream, and written to ``BENCH_lookup.json`` with a schema-stable record
-layout so future PRs can diff the perf trajectory
+hot-key cache enabled, reporting the measured hit rate. An ``update_mix``
+workload (``update_mix_stream``: a configurable read/write ratio of
+interleaved inserts, tombstone deletes, and merged lookups) exercises the
+updatable path — snapshot-rebuild merges are counted against build time
+(``build_s``), not serving time. Results are verified against
+np.searchsorted before (or, for the update mix, after) timing, appended to
+the CSV row stream, and written to ``BENCH_lookup.json`` with a
+schema-stable record layout so future PRs can diff the perf trajectory
 (``benchmarks.bench_diff``):
 
     {"dataset": str, "n": int, "eps": int, "backend": str,
-     "workload": "uniform" | "zipf",
+     "workload": "uniform" | "zipf" | "update_mix",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
 
-Zipf records additionally carry ``cache_hit_rate`` (schema-additive).
+Zipf records additionally carry ``cache_hit_rate``; update_mix records
+carry ``write_frac`` and ``merges`` (all schema-additive).
 
 Pallas interpret mode is a correctness harness, not a timing target, so it
 is measured over a smaller query slice; the recorded number tracks
@@ -25,6 +30,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import time
 
 import numpy as np
 
@@ -38,6 +44,8 @@ OUT_PATH = pathlib.Path("BENCH_lookup.json")
 PALLAS_QUERY_CAP = 8_192
 ZIPF_EPS = 64
 ZIPF_CACHE_SLOTS = 1 << 15
+UPDATE_MIX_WRITE_FRAC = 0.1       # writes / (reads + writes)
+UPDATE_MIX_ROUNDS = 8
 # best-of-N rejects shared-runner noise; interpret-mode pallas stays at 3
 # (it is a correctness harness, each repeat is expensive)
 REPEATS = {"numpy": 5, "jnp": 5, "pallas": 3}
@@ -62,10 +70,77 @@ def zipf_queries(keys: np.ndarray, n: int, *, theta: float = 1.2,
     return q
 
 
+def update_mix_stream(keys: np.ndarray, n_reads: int, *,
+                      write_frac: float = UPDATE_MIX_WRITE_FRAC,
+                      rounds: int = UPDATE_MIX_ROUNDS, seed: int = 11):
+    """Deterministic read/write op stream + its expected final state.
+
+    Returns (ops, final_model): ``ops`` is a list of per-round
+    (inserts, deletes, reads) arrays — inserts are fresh in-range keys,
+    deletes tombstone currently-present key values, reads draw from the
+    evolving logical set — and ``final_model`` is the logical key array
+    after every round (tombstone semantics: a delete removes every
+    occurrence of the key value). Writes make up ``write_frac`` of all ops.
+    """
+    rng = np.random.default_rng(seed)
+    n_writes = int(n_reads * write_frac / max(1.0 - write_frac, 1e-9))
+    per_r = max(n_reads // rounds, 1)
+    per_w = max(n_writes // rounds, 2)
+    model = keys.copy()
+    ops = []
+    for _ in range(rounds):
+        ins = rng.integers(keys[0], keys[-1], per_w // 2, dtype=np.uint64)
+        model = np.sort(np.concatenate([model, ins]))
+        dels = np.unique(model[rng.integers(0, model.size,
+                                            per_w - per_w // 2)])
+        model = model[~np.isin(model, dels)]
+        reads = model[rng.integers(0, model.size, per_r)]
+        ops.append((ins, dels, reads))
+    return ops, model
+
+
+def _run_update_mix(keys: np.ndarray, n_reads: int,
+                    eps: int = ZIPF_EPS) -> dict:
+    """Time the update-mix stream through the updatable jnp serving path.
+
+    Lookup timing excludes merge time (``stats.merge_s``): a snapshot
+    rebuild is build work triggered by writes, reported in ``build_s``
+    alongside the initial build. Correctness is asserted *after* timing:
+    a final merge folds everything into the snapshot, the logical key
+    array must equal the reference model, and a sample of merged lookups
+    must match np.searchsorted over it.
+    """
+    ops, model = update_mix_stream(keys, n_reads)
+    svc = PlexService(keys, eps=eps)
+    build0 = svc.build_s
+    svc.warmup("jnp")
+    t0 = time.perf_counter()
+    for ins, dels, reads in ops:
+        svc.insert(ins)
+        svc.delete(dels)
+        svc.lookup(reads, backend="jnp")
+    elapsed = time.perf_counter() - t0
+    serve_s = elapsed - svc.stats.merge_s
+    total_reads = sum(r.size for _, _, r in ops)
+    svc.merge()
+    assert np.array_equal(svc.logical_keys(), model), "update_mix diverged"
+    sample = model[np.random.default_rng(12).integers(0, model.size, 20_000)]
+    got = svc.lookup(sample, backend="jnp")
+    assert np.array_equal(got, np.searchsorted(model, sample, "left")), (
+        "update_mix merged lookup wrong")
+    return {
+        "ns_per_lookup": serve_s / total_reads * 1e9,
+        "build_s": build0 + svc.stats.merge_s,
+        "size_bytes": svc.size_bytes,
+        "write_frac": UPDATE_MIX_WRITE_FRAC,
+        "merges": svc.stats.merges,
+    }
+
+
 def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
     rows.append("serve,dataset,n,eps,backend,workload,ns_per_lookup,"
-                "build_s,size_bytes,cache_hit_rate")
+                "build_s,size_bytes,cache_hit_rate,write_frac,merges")
     records: list[dict] = []
     for dname, keys in datasets().items():
         q = queries(keys)
@@ -81,7 +156,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                                     repeats=REPEATS[backend])[backend]
                 rows.append(f"serve,{dname},{keys.size},{eps},{backend},"
                             f"uniform,{ns:.1f},{svc.build_s:.3f},"
-                            f"{svc.size_bytes},")
+                            f"{svc.size_bytes},,,")
                 records.append({
                     "dataset": dname, "n": int(keys.size), "eps": int(eps),
                     "backend": backend, "workload": "uniform",
@@ -104,7 +179,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                             repeats=REPEATS["jnp"])["jnp"]
         rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,zipf,"
                     f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes},"
-                    f"{hit_rate:.3f}")
+                    f"{hit_rate:.3f},,")
         records.append({
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "zipf",
@@ -112,6 +187,21 @@ def run(out_rows: list[str] | None = None) -> list[str]:
             "build_s": round(float(svc.build_s), 4),
             "size_bytes": int(svc.size_bytes),
             "cache_hit_rate": round(float(hit_rate), 4),
+        })
+        # read/write mix through the updatable merged-lookup path
+        um = _run_update_mix(keys, q.size)
+        rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,update_mix,"
+                    f"{um['ns_per_lookup']:.1f},{um['build_s']:.3f},"
+                    f"{um['size_bytes']},,{um['write_frac']:.2f},"
+                    f"{um['merges']}")
+        records.append({
+            "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
+            "backend": "jnp", "workload": "update_mix",
+            "ns_per_lookup": round(float(um["ns_per_lookup"]), 1),
+            "build_s": round(float(um["build_s"]), 4),
+            "size_bytes": int(um["size_bytes"]),
+            "write_frac": float(um["write_frac"]),
+            "merges": int(um["merges"]),
         })
     OUT_PATH.write_text(json.dumps(records, indent=1))
     rows.append(f"# serve wrote {OUT_PATH} ({len(records)} records)")

@@ -8,14 +8,15 @@ Lookup paths:
 """
 from .autotune import TuneResult, cht_cost_model, radix_cost_model, tune
 from .cht import CHT, adjacent_lcp, build_cht
-from .index import BACKENDS, LearnedIndex
-from .plex import PLEX, bounded_lower_bound, build_plex
+from .index import BACKENDS, LearnedIndex, Snapshot, shard_offsets
+from .plex import PLEX, bounded_lower_bound, build_plex, freeze_arrays
 from .radix_table import RadixTable, build_radix_table
 from .spline import Spline, build_spline
 
 __all__ = [
-    "BACKENDS", "CHT", "LearnedIndex", "PLEX", "RadixTable", "Spline",
-    "TuneResult", "adjacent_lcp", "bounded_lower_bound", "build_cht",
-    "build_plex", "build_radix_table", "build_spline", "cht_cost_model",
-    "radix_cost_model", "tune",
+    "BACKENDS", "CHT", "LearnedIndex", "PLEX", "RadixTable", "Snapshot",
+    "Spline", "TuneResult", "adjacent_lcp", "bounded_lower_bound",
+    "build_cht", "build_plex", "build_radix_table", "build_spline",
+    "cht_cost_model", "freeze_arrays", "radix_cost_model", "shard_offsets",
+    "tune",
 ]

@@ -1,4 +1,4 @@
-"""LearnedIndex — one lookup API over every PLEX backend.
+"""LearnedIndex + Snapshot — lookup dispatch and the immutable ownership unit.
 
 The repo grows three lookup paths (the numpy reference in ``plex.py``, the
 portable jit'd jnp pipeline, and the Pallas TPU pipeline). ``LearnedIndex``
@@ -22,17 +22,34 @@ All backends return the index of the first occurrence for present keys
 within its eps window, which may differ by the documented float32 slack at
 the extreme array edge. Accelerated backends are constructed lazily and
 cached, so a host-only user never imports jax kernels.
+
+Snapshot (the updatable-index ownership model)
+----------------------------------------------
+``Snapshot`` is the immutable unit everything read-only hangs off: the
+sorted key array, the per-shard frozen ``PLEX`` indexes (shard boundaries
+snapped to first occurrences), the shard-minima routing plane, and —
+lazily — the fused shard-major ``StackedPlanes`` device layout. Once built,
+a snapshot never changes: every host array is frozen
+(``plex.freeze_arrays``), so device planes and in-flight async batches can
+alias it safely, and an updatable service can swap in a *new* snapshot
+atomically while readers of the old one finish undisturbed. Updates between
+swaps live in a separate delta buffer (``serving.delta.DeltaBuffer``); the
+serving layer folds delta ranks into snapshot ranks at lookup time.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import time
+from typing import Any, Sequence
 
 import numpy as np
 
-from .plex import PLEX, build_plex
+from .plex import PLEX, build_plex, freeze_arrays
 
 BACKENDS = ("numpy", "jnp", "pallas")
+
+# keep each shard's float32 rank plane well inside the 2^24 limit
+SHARD_MAX_KEYS = 1 << 23
 
 
 @dataclasses.dataclass
@@ -121,3 +138,135 @@ class LearnedIndex:
         if (backend or self.default_backend) == "numpy":
             raise ValueError("numpy backend has no async plane-level path")
         return self.backend_impl(backend).lookup_planes(qhi, qlo)
+
+
+def shard_offsets(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Contiguous shard start offsets, snapped to first occurrences so a
+    duplicate run never straddles a boundary (global first-occurrence
+    semantics stay exact)."""
+    raw = (np.arange(n_shards, dtype=np.int64) * keys.size) // n_shards
+    snapped = np.searchsorted(keys, keys[raw], side="left")
+    snapped[0] = 0
+    return np.unique(snapped)
+
+
+class Snapshot:
+    """Immutable sharded index state: keys + frozen per-shard PLEX + planes.
+
+    Everything a lookup reads lives here and never changes after
+    ``Snapshot.build``: the sorted key array, the shard offset table, the
+    shard-minima routing plane, and the per-shard ``LearnedIndex`` wrappers
+    (their host arrays frozen via ``PLEX.freeze``). The fused shard-major
+    stacked device layout is built lazily at the first jnp lookup and cached
+    per (block, probe, cache_slots) configuration — the device-side hot-key
+    cache therefore lives *with* the snapshot and dies with it, which is
+    what makes a snapshot swap automatically invalidate stale cached
+    results.
+
+    A ``Snapshot`` is the unit of atomic replacement for updatable serving:
+    builders construct a complete new snapshot off the hot path and publish
+    it with a single reference assignment; readers that captured the old
+    reference keep a fully consistent index.
+    """
+
+    def __init__(self, keys: np.ndarray, eps: int, offsets: np.ndarray,
+                 shards: Sequence[LearnedIndex], *, build_s: float = 0.0,
+                 epoch: int = 0):
+        self.keys = keys
+        self.eps = int(eps)
+        self.offsets = offsets
+        self.shards = tuple(shards)
+        self.shard_min = keys[offsets].copy()
+        self.build_s = float(build_s)
+        self.epoch = int(epoch)
+        freeze_arrays(self.keys, self.offsets, self.shard_min)
+        for s in self.shards:
+            s.plex.freeze()
+        self._stacked = None
+        self._stacked_cfg = None
+        self._stacked_built = False
+
+    @classmethod
+    def build(cls, keys: np.ndarray, eps: int, *, n_shards: int | None = None,
+              backend: str = "numpy", block: int = 512,
+              devices: Sequence | None = None, epoch: int = 0,
+              **build_kw) -> "Snapshot":
+        """Host-side sharded build (the paper's single-pass build per shard).
+
+        ``devices``, when given, places shard planes round-robin. This runs
+        off any serving hot path: an updatable service keeps answering from
+        the previous snapshot until the new one is complete.
+
+        Ownership: the key array is adopted and **frozen in place**
+        (``writeable = False``) rather than copied — at the 200M-key scale
+        this repo targets, a defensive copy would double resident memory.
+        Pass ``keys.copy()`` if you need to keep mutating your array after
+        the build; a frozen array can also be re-thawed by its owner via
+        ``arr.flags.writeable = True`` once the snapshot is discarded.
+        """
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        if keys.size == 0:
+            raise ValueError("cannot snapshot an empty key set")
+        if np.any(keys[1:] < keys[:-1]):
+            raise ValueError("keys must be sorted")
+        if n_shards is None:
+            n_shards = -(-keys.size // SHARD_MAX_KEYS)
+        offsets = shard_offsets(keys, max(int(n_shards), 1))
+        t0 = time.perf_counter()
+        shards = []
+        for s, off in enumerate(offsets):
+            end = offsets[s + 1] if s + 1 < len(offsets) else keys.size
+            dev = (devices[s % len(devices)]
+                   if devices and len(offsets) > 1 else None)
+            shards.append(LearnedIndex.build(
+                keys[off:end], eps, backend=backend, block=block,
+                device=dev, **build_kw))
+        build_s = time.perf_counter() - t0
+        return cls(keys, eps, offsets, shards, build_s=build_s, epoch=epoch)
+
+    # -- metadata -----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_keys(self) -> int:
+        return int(self.keys.size)
+
+    @property
+    def size_bytes(self) -> int:
+        return sum(s.size_bytes for s in self.shards)
+
+    @property
+    def name(self) -> str:
+        return "Snapshot"
+
+    # -- routing ------------------------------------------------------------
+    def route(self, q: np.ndarray) -> np.ndarray:
+        """Shard id per query (largest shard whose min key is <= q)."""
+        q = np.asarray(q, dtype=np.uint64)
+        return np.clip(np.searchsorted(self.shard_min, q, side="right") - 1,
+                       0, self.n_shards - 1)
+
+    # -- stacked single-dispatch path ---------------------------------------
+    def stacked_impl(self, *, block: int = 512, probe: str | None = None,
+                     cache_slots: int = 0):
+        """The fused shard-major jnp path for this snapshot, or ``None`` when
+        the shards' static parameters could not be unified. Cached per
+        configuration (a serving layer asks with one fixed config, so this
+        is one build per snapshot in practice)."""
+        cfg = (block, probe, cache_slots)
+        if not self._stacked_built or self._stacked_cfg != cfg:
+            from ..kernels.jnp_lookup import StackedJnpPlex
+            self._stacked = StackedJnpPlex.from_plexes(
+                [s.plex for s in self.shards], self.offsets, block=block,
+                probe=probe, cache_slots=cache_slots)
+            self._stacked_cfg = cfg
+            self._stacked_built = True
+        return self._stacked
+
+    def built_stacked(self):
+        """The stacked impl if one has already been built, else ``None`` —
+        a side-effect-free peek (no device plane construction) for callers
+        that only need to poke an existing instance (cache reset)."""
+        return self._stacked if self._stacked_built else None

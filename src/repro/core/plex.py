@@ -68,6 +68,20 @@ class BuildStats:
     total_s: float
 
 
+def freeze_arrays(*arrays: np.ndarray) -> None:
+    """Mark numpy arrays immutable (``flags.writeable = False``).
+
+    The updatable-index ownership model (``core.index.Snapshot``) relies on
+    snapshots never changing after construction — device planes, routing
+    tables, and in-flight async batches all alias them. Freezing turns a
+    would-be heisenbug (a mutated snapshot silently diverging from its
+    device planes) into an immediate ``ValueError`` at the write site.
+    """
+    for a in arrays:
+        if isinstance(a, np.ndarray):
+            a.flags.writeable = False
+
+
 @dataclasses.dataclass
 class PLEX:
     spline: Spline
@@ -81,6 +95,19 @@ class PLEX:
     def size_bytes(self) -> int:
         """Index size (spline + radix layer), paper's size metric."""
         return self.spline.size_bytes + self.layer.size_bytes
+
+    def freeze(self) -> "PLEX":
+        """Make every host array backing this index read-only (in place).
+
+        Called when the index becomes part of an immutable ``Snapshot``;
+        lookups never write, so a frozen PLEX behaves identically.
+        """
+        layer_arr = (self.layer.table
+                     if isinstance(self.layer, RadixTable)
+                     else self.layer.cells)
+        freeze_arrays(self.keys, self.spline.keys, self.spline.positions,
+                      layer_arr)
+        return self
 
     @property
     def name(self) -> str:

@@ -20,6 +20,13 @@ shard-minima planes), the full radix->spline->probe pipeline, the per-shard
 result clamp, and the global-offset fold inside **one** jit'd function —
 one dispatch per micro-batch regardless of shard count, with an optional
 device-side hot-key result cache threaded through as explicit state.
+Passing a ``planes.DeltaPlanes`` buffer turns the same dispatch into a
+*merged* lookup (``delta_rank_adjust``): snapshot ranks plus the delta
+buffer's signed-weight prefix, matching searchsorted over the logical
+updated key array at no extra dispatches. A micro-batch whose valid lanes
+all hit the cache takes a ``lax.cond`` fast path that skips the snapshot
+pipeline (the delta fold still applies — cached entries are
+delta-independent snapshot ranks).
 
 Batches are processed in fixed ``block``-shaped chunks so XLA compiles the
 pipeline exactly once per index regardless of batch size.
@@ -28,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +43,7 @@ import numpy as np
 
 from ..core.plex import PLEX
 from .pairs import extract_bits, pair_le, split_u64
-from .planes import (PlexPlanes, StackedPlanes, build_planes,
+from .planes import (DeltaPlanes, PlexPlanes, StackedPlanes, build_planes,
                      build_stacked_planes, finalize_indices, pad_queries)
 from .plex_segment_lookup import (DEFAULT_BLOCK, cht_window_base,
                                   probe_lower_bound, radix_window_base,
@@ -162,6 +169,33 @@ def _stacked_pipeline(sp: StackedPlanes, probe: str, qhi, qlo):
     return local + jnp.take(sp.row_off, sid)
 
 
+def delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, *, cap: int):
+    """Merged-lookup rank adjustment against a device-resident delta buffer.
+
+    ``planes.DeltaPlanes`` layout: sorted delta key planes padded to the
+    static capacity ``cap`` with the max u64 key, plus the exclusive signed
+    weight prefix ``dcum`` (+1 per live insert, -multiplicity per tombstone).
+    The adjustment for query ``q`` is ``dcum[# delta keys < q]``: one
+    fixed-trip bisect (``ceil(log2(cap + 1))`` gather rounds) plus one
+    gather — cheap enough to fold into the snapshot pipeline's single jit
+    dispatch, which is what keeps merged lookups at one dispatch per
+    micro-batch.
+    """
+    zero = jnp.zeros(qhi.shape, jnp.int32)
+    cnt = probe_lower_bound(qhi, qlo, dkhi, dklo, zero, window=cap,
+                            mode="bisect")
+    return jnp.take(dcum, cnt)
+
+
+def _stacked_merged(sp: StackedPlanes, probe: str, cap: int, qhi, qlo,
+                    dkhi, dklo, dcum):
+    """Snapshot pipeline + delta fold: global *merged* first-occurrence
+    indices equal to searchsorted over the logical (snapshot - tombstones +
+    inserts) key array, in one dispatch."""
+    out = _stacked_pipeline(sp, probe, qhi, qlo)
+    return out + delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, cap=cap)
+
+
 def _cache_slot(qhi, qlo, n_slots: int):
     """Direct-mapped slot per query: a 32-bit multiplicative mix of both key
     words, masked to the power-of-two capacity."""
@@ -173,43 +207,88 @@ def _cache_slot(qhi, qlo, n_slots: int):
 _CACHE_EMPTY = 0xFFFFFFFF   # sentinel value row; real indices are < 2^31
 
 
-def _stacked_cached(sp: StackedPlanes, probe: str, qhi, qlo, cache):
-    """Stacked pipeline + device-side hot-key result cache.
+def _stacked_cached(sp: StackedPlanes, probe: str, cap: int, qhi, qlo,
+                    n_valid, cache, dkhi=None, dklo=None, dcum=None):
+    """Stacked (optionally merged) pipeline + device hot-key result cache.
 
     The cache is explicit state threaded through every micro-batch: one
-    uint32 [3, n_slots] array (rows: key hi, key lo, cached global index;
-    value ``_CACHE_EMPTY`` marks an empty slot). Hits select the cached
-    index; every lane write-through inserts its (key, result) as a single
-    whole-column scatter, so a colliding batch can never tear a slot's
-    (key, value) pair even where duplicate-scatter order is unspecified.
-    In the fixed-shape branchless pipeline a hit cannot yet skip lane
-    compute — results are bit-identical with and without the cache — so
-    the measured per-batch hit count is the deliverable: it tells a
-    skew-aware deployment what a compacting cache would save. Returns
-    (results, new cache, hit count).
+    uint32 [3, n_slots] array (rows: key hi, key lo, cached *snapshot*
+    rank; value ``_CACHE_EMPTY`` marks an empty slot). Hits select the
+    cached rank; every lane write-through inserts its (key, snapshot rank)
+    as a single whole-column scatter, so a colliding batch can never tear
+    a slot's (key, value) pair even where duplicate-scatter order is
+    unspecified.
+
+    Caching snapshot ranks — not merged results — is what makes entries
+    *delta-independent*: the delta fold is applied after cache resolution
+    on every lane, so the cache stays valid across insert/delete
+    mutations with no invalidation (and no writer/reader race on a reset),
+    and dies naturally with its snapshot at a swap.
+
+    Fast path: when *every* valid lane hits (``n_valid`` masks the padded
+    tail, whose lanes replicate the last valid query), a ``lax.cond``
+    skips the snapshot pipeline entirely — full-hit micro-batches cost a
+    hash, three gathers, a compare, and (in updated epochs) the delta
+    bisect instead of the whole lookup, still within the same single
+    dispatch. Results are bit-identical with the cache on or off.
+
+    ``cap == 0`` means no delta buffer (a read-only epoch); ``cap > 0``
+    appends the ``DeltaPlanes`` arrays. Returns (results, new cache,
+    valid-lane hit count, full-hit flag).
     """
-    out = _stacked_pipeline(sp, probe, qhi, qlo)
     slot = _cache_slot(qhi, qlo, cache.shape[1])
     ckhi, cklo, cval = (jnp.take(cache[0], slot), jnp.take(cache[1], slot),
                         jnp.take(cache[2], slot))
     hit = (cval != jnp.uint32(_CACHE_EMPTY)) & (ckhi == qhi) & (cklo == qlo)
-    res = jnp.where(hit, cval.astype(jnp.int32), out)
+    valid = jax.lax.iota(jnp.int32, qhi.shape[0]) < n_valid
+    full_hit = jnp.all(hit | ~valid)
+
+    def fast(_):
+        return cval.astype(jnp.int32)
+
+    def slow(_):
+        return _stacked_pipeline(sp, probe, qhi, qlo)
+
+    snap = jax.lax.cond(full_hit, fast, slow, None)
+    snap = jnp.where(hit, cval.astype(jnp.int32), snap)
     new = cache.at[:, slot].set(
-        jnp.stack([qhi, qlo, res.astype(jnp.uint32)]))
-    return res, new, jnp.sum(hit.astype(jnp.int32))
+        jnp.stack([qhi, qlo, snap.astype(jnp.uint32)]))
+    res = snap
+    if cap:
+        res = res + delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, cap=cap)
+    return res, new, jnp.sum((hit & valid).astype(jnp.int32)), full_hit
+
+
+class LaneResult(NamedTuple):
+    """One micro-batch dispatch: async device results + cache telemetry
+    (``hits``/``full_hit`` are device scalars, ``None`` with the cache
+    off — readable without an extra dispatch at the caller's sync point)."""
+    out: Any
+    hits: Any = None
+    full_hit: Any = None
 
 
 @dataclasses.dataclass
 class StackedJnpPlex:
-    """Single-dispatch multi-shard lookup over ``StackedPlanes``."""
+    """Single-dispatch multi-shard lookup over ``StackedPlanes``.
+
+    With a ``DeltaPlanes`` buffer passed to ``lookup_planes`` the dispatch
+    becomes a *merged* lookup — snapshot ranks plus delta rank adjustment,
+    still one jit call per micro-batch. The merged variants are compiled
+    lazily per delta capacity (``_merged_fns``/``_cached_fns``); the
+    delta-free fns stay separate so read-only epochs pay nothing for
+    updatability.
+    """
 
     planes: StackedPlanes
     block: int
     probe: str
     cache_slots: int = 0
-    _fn: Any = None
-    _cached_fn: Any = None
+    _fn: Any = None           # delta-free pipeline (read-only epochs)
+    _cached_fn: Any = None    # delta-free pipeline + hot-key cache
     _cache: Any = None        # uint32 [3, n_slots] device array or None
+    _merged_fns: dict = dataclasses.field(default_factory=dict)
+    _cached_merged_fns: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
@@ -231,7 +310,7 @@ class StackedJnpPlex:
         st._fn = jax.jit(functools.partial(_stacked_pipeline, sp, probe))
         if cache_slots:
             st._cached_fn = jax.jit(
-                functools.partial(_stacked_cached, sp, probe))
+                functools.partial(_stacked_cached, sp, probe, 0))
             st._cache = jnp.full((3, cache_slots), _CACHE_EMPTY, jnp.uint32)
         return st
 
@@ -239,22 +318,64 @@ class StackedJnpPlex:
     def n_real_total(self) -> int:
         return self.planes.n_real_total
 
-    def lookup_planes(self, qhi, qlo):
-        """One [block]-shaped chunk of query planes -> (global int32
-        indices, device hit count | None). Dispatches asynchronously and
-        advances the cache state."""
-        if self._cached_fn is not None:
-            out, self._cache, hits = self._cached_fn(qhi, qlo, self._cache)
-            return out, hits
-        return self._fn(qhi, qlo), None
+    def reset_cache(self) -> None:
+        """Empty the hot-key cache. Not needed on updates — entries hold
+        delta-independent snapshot ranks — but kept for manual telemetry
+        resets; a snapshot swap retires the whole impl (cache included)."""
+        if self._cache is not None:
+            self._cache = jnp.full((3, self.cache_slots), _CACHE_EMPTY,
+                                   jnp.uint32)
 
-    def lookup(self, q: np.ndarray) -> np.ndarray:
+    def _merged_fn(self, cap: int):
+        fn = self._merged_fns.get(cap)
+        if fn is None:
+            fn = jax.jit(functools.partial(_stacked_merged, self.planes,
+                                           self.probe, cap))
+            self._merged_fns[cap] = fn
+        return fn
+
+    def _cached_merged_fn(self, cap: int):
+        fn = self._cached_merged_fns.get(cap)
+        if fn is None:
+            fn = jax.jit(functools.partial(_stacked_cached, self.planes,
+                                           self.probe, cap))
+            self._cached_merged_fns[cap] = fn
+        return fn
+
+    def lookup_planes(self, qhi, qlo, n_valid: int | None = None,
+                      delta: DeltaPlanes | None = None) -> LaneResult:
+        """One [block]-shaped chunk of query planes -> ``LaneResult`` of
+        global int32 indices (+ cache telemetry). Dispatches asynchronously
+        and advances the cache state. ``delta`` folds the device-resident
+        delta buffer into the same dispatch (merged lookup); ``n_valid``
+        marks the real (unpadded) lane count for cache accounting."""
+        dp = delta if delta is not None and delta.n_entries else None
+        if self._cache is not None:
+            nv = np.int32(self.block if n_valid is None else n_valid)
+            if dp is None:
+                out, self._cache, hits, fh = self._cached_fn(
+                    qhi, qlo, nv, self._cache)
+            else:
+                out, self._cache, hits, fh = self._cached_merged_fn(dp.cap)(
+                    qhi, qlo, nv, self._cache, dp.khi, dp.klo, dp.cum0)
+            return LaneResult(out, hits, fh)
+        if dp is None:
+            return LaneResult(self._fn(qhi, qlo))
+        return LaneResult(self._merged_fn(dp.cap)(qhi, qlo, dp.khi, dp.klo,
+                                                  dp.cum0))
+
+    def lookup(self, q: np.ndarray, delta: DeltaPlanes | None = None
+               ) -> np.ndarray:
         """Batched global lookup (convenience; the serving layer drives
         ``lookup_planes`` directly for the async pipeline)."""
         qp, b = pad_queries(q, self.block)
         qh, ql = split_u64(qp)
-        outs = [self.lookup_planes(jnp.asarray(qh[i:i + self.block]),
-                                   jnp.asarray(ql[i:i + self.block]))[0]
-                for i in range(0, qp.size, self.block)]
+        outs = []
+        for i in range(0, qp.size, self.block):
+            nv = min(self.block, max(b - i, 1))
+            outs.append(self.lookup_planes(
+                jnp.asarray(qh[i:i + self.block]),
+                jnp.asarray(ql[i:i + self.block]), n_valid=nv,
+                delta=delta).out)
         return np.concatenate([np.asarray(o) for o in outs])[:b].astype(
             np.int64)

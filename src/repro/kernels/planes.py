@@ -179,6 +179,52 @@ def build_planes(px: PLEX) -> PlexPlanes:
 
 
 @dataclasses.dataclass
+class DeltaPlanes:
+    """Device-resident sorted delta buffer planes (updatable serving).
+
+    The logical content is a sorted multiset of (key, signed weight) entries:
+    ``+1`` per live inserted key, ``-multiplicity`` per tombstoned snapshot
+    key. ``cum0`` is the exclusive prefix sum of the weights (length
+    ``cap + 1``, leading 0), so the merged-lookup rank adjustment for a
+    query ``q`` is ``cum0[count of delta keys < q]`` — one fixed-trip
+    bisect over the key planes plus one gather, cheap enough to fold into
+    the stacked pipeline's single jit dispatch.
+
+    ``cap`` is the padded static capacity (the jit'd merged pipeline is
+    compiled per ``cap``; the serving layer grows it geometrically so a
+    busy updatable service compiles the merged path a handful of times,
+    not per update). Pad keys are the max u64 — never strictly below any
+    query — with weight 0, so padding never perturbs the adjustment.
+    """
+    khi: Any                  # uint32 [cap]
+    klo: Any                  # uint32 [cap]
+    cum0: Any                 # int32 [cap + 1], exclusive weight prefix
+    cap: int
+    n_entries: int            # real (unpadded) entries
+
+
+def build_delta_planes(keys: np.ndarray, weights: np.ndarray,
+                       cap: int) -> DeltaPlanes:
+    """Sorted delta entries -> padded device planes (see ``DeltaPlanes``)."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    weights = np.asarray(weights, dtype=np.int64)
+    if keys.size > cap:
+        raise ValueError(f"delta size {keys.size} exceeds capacity {cap}")
+    if np.any(keys[1:] < keys[:-1]):
+        raise ValueError("delta keys must be sorted")
+    kh, kl = split_u64(np.concatenate(
+        [keys, np.full(cap - keys.size, _U64_MAX, dtype=np.uint64)]))
+    cum0 = np.zeros(cap + 1, dtype=np.int64)
+    np.cumsum(weights, out=cum0[1:keys.size + 1])
+    cum0[keys.size + 1:] = cum0[keys.size]
+    if np.abs(cum0).max(initial=0) >= (1 << 31):
+        raise ValueError("delta weight prefix exceeds int32 range")
+    return DeltaPlanes(khi=jnp.asarray(kh), klo=jnp.asarray(kl),
+                       cum0=jnp.asarray(cum0.astype(np.int32)), cap=int(cap),
+                       n_entries=int(keys.size))
+
+
+@dataclasses.dataclass
 class StackedPlanes:
     """Shard-major fused planes of several shard-local PLEX indexes.
 

@@ -1,7 +1,8 @@
+from .delta import DeltaBuffer
 from .engine import ServeEngine
 from .kv_cache import PagedKVStore, PageTable
 from .plex_service import (LookupTicket, PlexService, ServiceStats,
                            service_mesh)
 
-__all__ = ["LookupTicket", "PagedKVStore", "PageTable", "PlexService",
-           "ServeEngine", "ServiceStats", "service_mesh"]
+__all__ = ["DeltaBuffer", "LookupTicket", "PagedKVStore", "PageTable",
+           "PlexService", "ServeEngine", "ServiceStats", "service_mesh"]

@@ -1,45 +1,76 @@
-"""PlexService — sharded, micro-batched, async PLEX query serving.
+"""PlexService — sharded, micro-batched, async, *updatable* PLEX serving.
 
-One serving front-end over ``core.index.LearnedIndex``:
+One serving front-end over the snapshot + delta ownership model:
 
-* **Key-space sharding.** The sorted key array is split into contiguous
-  shards (boundaries snapped to first occurrences so duplicate runs never
-  straddle a shard); each shard is an independent ``LearnedIndex`` whose
-  device planes are placed round-robin over a ``jax`` mesh
-  (``parallel.sharding`` supplies the mesh/partition-spec plumbing). This
-  is also what keeps every float32 rank plane < 2^24 positions, the
-  device-path requirement for 200M-key scale.
-* **Single-dispatch stacked routing (jnp backend).** At first jnp lookup
-  the per-shard planes are fused into a shard-major stacked layout
-  (``kernels.planes.StackedPlanes``); shard routing, the full
-  radix->spline->probe pipeline, the per-shard clamp, and the global-offset
-  fold then run inside **one** jit'd function per micro-batch — no
-  per-shard Python dispatch, one host->device round trip per micro-batch
-  regardless of shard count. Shards whose layers cannot be unified fall
-  back to host routing + per-shard dispatch, still with async batching.
+* **Immutable snapshots.** All read-only state lives in a
+  ``core.index.Snapshot``: the sorted key array, per-shard frozen ``PLEX``
+  indexes (boundaries snapped to first occurrences; each shard's float32
+  rank plane stays < 2^24 positions, the device-path requirement for
+  200M-key scale), the shard-minima routing plane, and the lazily-fused
+  shard-major stacked device layout. Snapshot arrays are frozen
+  (``writeable = False``); nothing on the read path ever mutates them.
+  The constructor *adopts* the caller's key array and freezes it in place
+  (no defensive copy at 200M-key scale — pass ``keys.copy()`` to keep a
+  mutable array).
+* **Device-resident delta buffer.** ``insert()``/``delete()`` land in a
+  ``DeltaBuffer`` (sorted inserts + tombstones with snapshot
+  multiplicities). Every lookup is a **merged** lookup: the jit'd stacked
+  pipeline folds the delta's signed-weight rank adjustment into the same
+  single dispatch per micro-batch (``kernels.jnp_lookup.delta_rank_adjust``)
+  so results equal ``np.searchsorted`` over the logical merged key array;
+  host backends (numpy / per-shard fallback / pallas) apply the identical
+  adjustment on the host. Read-only epochs keep the delta-free pipeline —
+  updatability costs nothing until the first update.
+* **Threshold-triggered merge + atomic swap.** When the buffer exceeds
+  ``merge_threshold`` entries (or on an explicit ``merge()``), the logical
+  key array is materialised and a complete new ``Snapshot`` is rebuilt via
+  ``build_plex`` *off the hot path*; the service then publishes the new
+  (snapshot, fresh delta) pair with a single reference assignment — the
+  atomic-swap contract: a reader that captured the old state keeps a fully
+  consistent index, and no reader ever observes a half-built one. Swaps
+  start a new stats epoch and a fresh hot-key cache.
+* **Single-dispatch stacked routing (jnp backend).** Shard routing, the
+  radix->spline->probe pipeline, the per-shard clamp, the global-offset
+  fold, and the delta fold all run inside **one** jit'd function per
+  micro-batch — no per-shard Python dispatch. Shards whose layers cannot
+  be unified fall back to host routing + per-shard dispatch (still with
+  the host-side delta adjustment).
 * **Async micro-batch pipeline.** ``lookup`` chops query streams into
-  fixed ``block``-sized micro-batches (lane-multiple; the final one padded
-  from a preallocated staging buffer), dispatches them all eagerly (jax
-  async dispatch), and syncs once at the end. For continuous streams,
-  ``submit()`` queues queries into deadline-driven micro-batch formation
-  across callers and returns a ``LookupTicket``; ``drain()`` (or
-  ``ticket.result()``) flushes the sub-block remainder and syncs every
-  in-flight batch. ``ServiceStats`` tracks in-flight vs drained batches.
+  fixed ``block``-sized micro-batches, dispatches them all eagerly, and
+  syncs once. ``submit()`` queues queries into deadline-driven micro-batch
+  formation across callers; full blocks dispatch immediately, and a
+  **background timer thread** flushes (and drains) a sub-block remainder
+  when the oldest queued query's ``max_delay_s`` deadline expires — tail
+  latency is bounded even when no further submit/drain call arrives.
 * **Hot-key result cache.** ``cache_slots > 0`` threads a device-side
-  direct-mapped result cache through the stacked pipeline; the measured
-  hit rate (``stats.cache_hit_rate``) quantifies workload skew. Results
-  are bit-identical with the cache on or off.
+  direct-mapped cache of *snapshot ranks* through the stacked pipeline —
+  the delta folds in after cache resolution, so entries survive updates
+  untouched and retire with their snapshot at a swap (no invalidation, no
+  reset race with lock-free readers). A micro-batch whose valid lanes
+  *all* hit takes a ``lax.cond`` fast path that skips the snapshot
+  pipeline entirely — full-hit batches are actually cheaper, still one
+  dispatch. Hit accounting masks padded lanes, and counters reset per
+  epoch, so ``stats.cache_hit_rate`` is the current snapshot's number.
+  Results are bit-identical with the cache on or off.
 
-Global contract: for present keys ``lookup`` returns the global index of
-the first occurrence (identical across backends). For absent keys each
-backend returns its eps-window lower bound, with the documented edge
-behaviour at shard boundaries.
+Consistency contract: updates (and merges) first drain the submit queue,
+so every queued lookup observes the state at its dispatch; lookups then see
+delta changes immediately. Mutations are single-writer (serialised under
+the service lock); ``lookup`` itself is lock-free and captures one
+consistent (snapshot, delta) state per call.
+
+Global contract: for present keys ``lookup`` returns the first-occurrence
+index in the *logical* (merged) key array, identical across backends. For
+absent keys each backend returns its eps-window lower bound plus the delta
+adjustment — exact whenever the snapshot's window is conclusive (always,
+for snapshots without duplicate runs wider than eps).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import threading
 import time
 from typing import Iterable, Sequence
 
@@ -47,21 +78,26 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from ..core.index import BACKENDS, LearnedIndex
+from ..core.index import BACKENDS, SHARD_MAX_KEYS, LearnedIndex, Snapshot
 from ..kernels.jnp_lookup import PROBE_MODES
 from ..kernels.pairs import split_u64
 from ..kernels.planes import finalize_indices
 from ..parallel.sharding import logical_sharding
+from .delta import DELTA_CAP_MIN, DeltaBuffer, next_pow2
+
+__all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD", "LookupTicket",
+           "PlexService", "ServiceStats", "SHARD_MAX_KEYS", "service_mesh"]
 
 # one logical rule: query batches shard over the mesh's data axis
 _SERVICE_RULES = {"act_batch": ("data",)}
 
-# keep each shard's float32 rank plane well inside the 2^24 limit
-SHARD_MAX_KEYS = 1 << 23
-
 # default micro-batch: large enough to amortise dispatch overhead on every
 # backend, small enough that deadline-driven formation stays sub-ms-ish
 DEFAULT_BLOCK = 4096
+
+# delta entries that trigger a snapshot rebuild + swap. Sized so the merged
+# pipeline's extra bisect depth stays ~log2(4096) = 12 gather rounds.
+DEFAULT_MERGE_THRESHOLD = 4096
 
 
 @dataclasses.dataclass
@@ -71,8 +107,16 @@ class ServiceStats:
     padded_lanes: int = 0
     inflight_batches: int = 0     # dispatched to device, not yet synced
     drained_batches: int = 0      # synced back to the host
-    cache_queries: int = 0        # lanes through the hot-key cache (incl pad)
-    cache_hits: int = 0
+    # per-epoch counters (reset by new_epoch on every snapshot swap)
+    epoch: int = 0
+    cache_queries: int = 0        # valid (unpadded) lanes through the cache
+    cache_hits: int = 0           # valid-lane hits
+    full_hit_batches: int = 0     # micro-batches served by the fast path
+    # update-path counters
+    inserts: int = 0
+    deletes: int = 0              # logical occurrences removed
+    merges: int = 0
+    merge_s: float = 0.0          # snapshot rebuild time (build, not serve)
 
     def note(self, n_queries: int, n_batches: int, n_padded: int) -> None:
         self.queries += n_queries
@@ -83,8 +127,20 @@ class ServiceStats:
         self.inflight_batches -= n_batches
         self.drained_batches += n_batches
 
+    def new_epoch(self, epoch: int) -> None:
+        """Start a fresh stats epoch at a snapshot swap: cache counters
+        restart so ``cache_hit_rate`` describes the *current* snapshot
+        instead of mixing epochs (the old epoch's totals stay in the
+        cumulative query/batch counters)."""
+        self.epoch = epoch
+        self.cache_queries = 0
+        self.cache_hits = 0
+        self.full_hit_batches = 0
+
     @property
     def cache_hit_rate(self) -> float:
+        """Valid-lane hit rate for the current epoch (padded lanes are
+        excluded from both numerator and denominator)."""
         return self.cache_hits / self.cache_queries if self.cache_queries \
             else 0.0
 
@@ -112,6 +168,15 @@ class LookupTicket:
         return self._out
 
 
+@dataclasses.dataclass(frozen=True)
+class _ServiceState:
+    """The atomically-swapped (snapshot, delta) pair. One reference
+    assignment publishes both together, so a reader can never pair a new
+    snapshot with the previous epoch's delta (or vice versa)."""
+    snapshot: Snapshot
+    delta: DeltaBuffer
+
+
 def service_mesh(devices: Sequence | None = None) -> Mesh:
     """1-D ``data`` mesh over the available jax devices."""
     devs = np.asarray(devices if devices is not None else jax.devices())
@@ -119,13 +184,15 @@ def service_mesh(devices: Sequence | None = None) -> Mesh:
 
 
 class PlexService:
-    """Serve PLEX lookups for one key set across shards and backends."""
+    """Serve (and update) PLEX lookups across shards and backends."""
 
     def __init__(self, keys: np.ndarray, eps: int = 64, *,
                  n_shards: int | None = None, backend: str = "jnp",
                  block: int = DEFAULT_BLOCK, mesh: Mesh | None = None,
                  probe: str | None = None, cache_slots: int = 0,
-                 max_delay_s: float = 0.002, **build_kw):
+                 max_delay_s: float = 0.002,
+                 merge_threshold: int = DEFAULT_MERGE_THRESHOLD,
+                 **build_kw):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         if block % 128 != 0:
@@ -140,7 +207,6 @@ class PlexService:
             raise ValueError("cannot serve an empty key set")
         if np.any(keys[1:] < keys[:-1]):
             raise ValueError("keys must be sorted")
-        self.keys = keys
         self.eps = int(eps)
         self.default_backend = backend
         self.block = int(block)
@@ -148,99 +214,157 @@ class PlexService:
         self.probe = probe
         self.cache_slots = int(cache_slots)
         self.max_delay_s = float(max_delay_s)
+        self.merge_threshold = int(merge_threshold)
         self.stats = ServiceStats()
+        self._n_shards_req = n_shards
+        self._build_kw = build_kw
+        self._devices = list(self.mesh.devices.flat)
 
-        if n_shards is None:
-            n_shards = -(-keys.size // SHARD_MAX_KEYS)
-        self.offsets = self._shard_offsets(keys, max(int(n_shards), 1))
-        n_dev = self.mesh.size
-        devs = list(self.mesh.devices.flat)
-        self.shards: list[LearnedIndex] = []
-        t0 = time.perf_counter()
-        for s, off in enumerate(self.offsets):
-            end = (self.offsets[s + 1] if s + 1 < len(self.offsets)
-                   else keys.size)
-            dev = devs[s % n_dev] if len(self.offsets) > 1 else None
-            self.shards.append(LearnedIndex.build(
-                keys[off:end], eps, backend=backend, block=block,
-                device=dev, **build_kw))
-        self.build_s = time.perf_counter() - t0
-        # routing plane: first key of each shard
-        self.shard_min = keys[self.offsets]
+        # fixed delta capacity: the merge threshold bounds the buffer, so
+        # sizing the device view to it up front means the merged pipeline
+        # compiles once per snapshot, never mid-stream on capacity growth
+        # (manual-merge services, threshold 0, grow geometrically instead)
+        self._delta_capacity = max(
+            next_pow2(max(self.merge_threshold, 1)), DELTA_CAP_MIN)
+        snap = Snapshot.build(keys, eps, n_shards=n_shards, backend=backend,
+                              block=self.block, devices=self._devices,
+                              **build_kw)
+        self._state = _ServiceState(
+            snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+
         # fixed per-service: micro-batch query planes shard over "data"
         self._batch_sharding = logical_sharding(
             ("act_batch",), (self.block,), self.mesh, _SERVICE_RULES)
-        # stacked single-dispatch path, built lazily at first jnp lookup
-        self._stacked = None
-        self._stacked_built = False
         # preallocated staging buffers: final-micro-batch padding reuses
-        # these instead of concatenating a fresh array per call (the lookup
-        # path syncs before returning, so per-call reuse cannot alias an
-        # in-flight dispatch)
-        self._mb_buf = np.empty(self.block, dtype=np.uint64)
-        self._tail_hi = np.empty(self.block, dtype=np.uint32)
-        self._tail_lo = np.empty(self.block, dtype=np.uint32)
+        # these instead of concatenating a fresh array per call. They are
+        # *thread-local* because lookup() is lock-free — concurrent readers
+        # must not stage tails into one shared buffer — and safe to reuse
+        # per call within a thread: every lookup path syncs before
+        # returning, so a staged batch can never still be in flight at the
+        # same thread's next staging.
+        self._staging = threading.local()
         # submit()/drain() queue: chunks are [ticket, queries, consumed,
-        # arrival]; outstanding holds dispatched-but-unsynced batches
+        # arrival]; outstanding holds dispatched-but-unsynced batches.
+        # All queue/update mutation is serialised under the RLock (submit,
+        # drain, the deadline timer thread, insert/delete/merge).
         self._q_chunks: collections.deque = collections.deque()
         self._q_len = 0
         self._outstanding: list[tuple] = []
-
-    @staticmethod
-    def _shard_offsets(keys: np.ndarray, n_shards: int) -> np.ndarray:
-        """Contiguous shard start offsets, snapped to first occurrences so a
-        duplicate run never straddles a boundary (global first-occurrence
-        semantics stay exact)."""
-        raw = (np.arange(n_shards, dtype=np.int64) * keys.size) // n_shards
-        snapped = np.searchsorted(keys, keys[raw], side="left")
-        snapped[0] = 0
-        return np.unique(snapped)
+        self._lock = threading.RLock()
+        self._timer: threading.Timer | None = None
 
     # -- metadata -----------------------------------------------------------
     @property
+    def keys(self) -> np.ndarray:
+        """The *snapshot* key array (immutable). See ``logical_keys()`` for
+        the merged view including pending updates."""
+        return self._state.snapshot.keys
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return self._state.snapshot.offsets
+
+    @property
+    def shard_min(self) -> np.ndarray:
+        return self._state.snapshot.shard_min
+
+    @property
+    def shards(self) -> Sequence[LearnedIndex]:
+        return self._state.snapshot.shards
+
+    @property
     def n_shards(self) -> int:
-        return len(self.shards)
+        return self._state.snapshot.n_shards
+
+    @property
+    def build_s(self) -> float:
+        return self._state.snapshot.build_s
 
     @property
     def size_bytes(self) -> int:
-        return sum(s.size_bytes for s in self.shards)
+        return self._state.snapshot.size_bytes
+
+    @property
+    def epoch(self) -> int:
+        return self._state.snapshot.epoch
+
+    @property
+    def n_keys(self) -> int:
+        """Logical key count (snapshot plus pending delta)."""
+        state = self._state
+        return state.snapshot.n_keys + state.delta.net_keys
+
+    @property
+    def n_pending(self) -> int:
+        """Delta entries buffered since the last merge."""
+        return self._state.delta.n_entries
 
     @property
     def name(self) -> str:
         return "PlexService"
 
-    # -- stacked single-dispatch path ---------------------------------------
-    def stacked_impl(self):
-        """The fused shard-major jnp path, or ``None`` when the shards'
-        static parameters could not be unified (per-shard fallback)."""
-        if not self._stacked_built:
-            from ..kernels.jnp_lookup import StackedJnpPlex
-            self._stacked = StackedJnpPlex.from_plexes(
-                [s.plex for s in self.shards], self.offsets,
-                block=self.block, probe=self.probe,
-                cache_slots=self.cache_slots)
-            self._stacked_built = True
-        return self._stacked
+    def logical_keys(self) -> np.ndarray:
+        """Materialise the logical merged key array (for verification and
+        merge; the serve path never needs it)."""
+        state = self._state
+        if state.delta.empty:
+            return state.snapshot.keys
+        return state.delta.logical_keys()
 
-    def _dispatch_planes(self, st, qhi: np.ndarray, qlo: np.ndarray):
+    # -- stacked single-dispatch path ---------------------------------------
+    def stacked_impl(self, state: _ServiceState | None = None):
+        """The fused shard-major jnp path of ``state``'s snapshot (the
+        current one by default), or ``None`` when the shards' static
+        parameters could not be unified (per-shard fallback). Callers that
+        already captured a state MUST pass it, so a concurrent swap can
+        never pair one snapshot's planes with another epoch's delta."""
+        state = state if state is not None else self._state
+        return state.snapshot.stacked_impl(
+            block=self.block, probe=self.probe, cache_slots=self.cache_slots)
+
+    @staticmethod
+    def _delta_view(state: _ServiceState):
+        """Device delta planes for merged dispatch (``None`` when the epoch
+        is read-only, keeping the delta-free pipeline)."""
+        return None if state.delta.empty else state.delta.device_view()
+
+    def _dispatch_planes(self, st, qhi: np.ndarray, qlo: np.ndarray,
+                         n_valid: int, delta):
         """One micro-batch of query planes -> async device result. The one
         host->device round trip of the stacked path: two plane puts in, one
-        fused jit dispatch, nothing synced."""
+        fused jit dispatch (merged with the delta when one is live),
+        nothing synced."""
         qhi = jax.device_put(qhi, self._batch_sharding)
         qlo = jax.device_put(qlo, self._batch_sharding)
-        out, hits = st.lookup_planes(qhi, qlo)
+        res = st.lookup_planes(qhi, qlo, n_valid=n_valid, delta=delta)
         self.stats.inflight_batches += 1
-        if hits is not None:
-            self.stats.cache_queries += self.block
-        return out, hits
+        if res.hits is not None:
+            self.stats.cache_queries += n_valid
+        return res
+
+    def _note_synced(self, res, epoch: int) -> None:
+        """Fold one synced ``LaneResult``'s cache telemetry into the stats
+        (called only after the host has materialised the batch). ``epoch``
+        is the stats epoch the batch was dispatched under: a batch that
+        straddled a snapshot swap is dropped from the fresh epoch's
+        counters, so a swap can never leave ``cache_hits`` without its
+        matching ``cache_queries`` (counters are best-effort telemetry
+        under concurrent lock-free readers; results are never affected)."""
+        if res.hits is not None and epoch == self.stats.epoch:
+            self.stats.cache_hits += int(res.hits)
+            self.stats.full_hit_batches += int(bool(np.asarray(
+                res.full_hit)))
 
     def _tail_planes(self, qh_all: np.ndarray, ql_all: np.ndarray,
                      start: int) -> tuple[np.ndarray, np.ndarray]:
-        """Stage the final partial micro-batch into the preallocated tail
-        buffers, padded by repeating the last plane values. Safe to reuse
-        per call: every lookup path syncs before returning, so a staged
-        batch can never still be in flight at the next staging."""
-        th, tl = self._tail_hi, self._tail_lo
+        """Stage the final partial micro-batch into this thread's
+        preallocated tail buffers, padded by repeating the last plane
+        values (reuse contract on ``_staging``)."""
+        st = self._staging
+        if not hasattr(st, "tail_hi"):
+            st.tail_hi = np.empty(self.block, dtype=np.uint32)
+            st.tail_lo = np.empty(self.block, dtype=np.uint32)
+        th, tl = st.tail_hi, st.tail_lo
         rem = qh_all.size - start
         th[:rem] = qh_all[start:]
         th[rem:] = qh_all[-1]
@@ -260,49 +384,56 @@ class PlexService:
         if rem:
             yield self._tail_planes(qh_all, ql_all, n_full * b)
 
-    def _stacked_lookup(self, st, q: np.ndarray) -> np.ndarray:
-        """Whole-batch stacked lookup: split once, dispatch every micro-batch
-        eagerly, sync once at the end."""
+    def _stacked_lookup(self, st, q: np.ndarray,
+                        state: _ServiceState) -> np.ndarray:
+        """Whole-batch stacked (merged) lookup: split once, dispatch every
+        micro-batch eagerly, sync once at the end."""
         b = self.block
+        epoch = self.stats.epoch
+        delta = self._delta_view(state)
         qh_all, ql_all = split_u64(q)
-        outs = [self._dispatch_planes(st, qh, ql)
-                for qh, ql in self._block_planes(qh_all, ql_all)]
+        outs = [self._dispatch_planes(st, qh, ql,
+                                      min(b, q.size - i * b), delta)
+                for i, (qh, ql) in enumerate(
+                    self._block_planes(qh_all, ql_all))]
         n_batches = len(outs)
         self.stats.note(q.size, n_batches, n_batches * b - q.size)
         # one sync point: host materialisation of the eagerly-queued results
-        res = np.concatenate([np.asarray(o) for o, _ in outs])[:q.size]
-        for _, hits in outs:
-            if hits is not None:
-                self.stats.cache_hits += int(hits)
+        res = np.concatenate([np.asarray(o.out) for o in outs])[:q.size]
+        for o in outs:
+            self._note_synced(o, epoch)
         self.stats.note_drained(n_batches)
         return res.astype(np.int64)
 
     # -- serving ------------------------------------------------------------
     def route(self, q: np.ndarray) -> np.ndarray:
         """Shard id per query (largest shard whose min key is <= q)."""
-        q = np.asarray(q, dtype=np.uint64)
-        return np.clip(np.searchsorted(self.shard_min, q, side="right") - 1,
-                       0, self.n_shards - 1)
+        return self._state.snapshot.route(q)
 
     def _microbatches(self, q: np.ndarray) -> Iterable[np.ndarray]:
         """Fixed ``block``-sized micro-batches; the final one is padded by
-        repeating the last query into the preallocated staging buffer (no
-        per-call concatenate churn)."""
+        repeating the last query into this thread's preallocated staging
+        buffer (no per-call concatenate churn; reuse contract on
+        ``_staging``)."""
         b = self.block
         n_full, rem = divmod(q.size, b)
         for i in range(n_full):
             yield q[i * b:(i + 1) * b]
         if rem:
-            buf = self._mb_buf
+            st = self._staging
+            if not hasattr(st, "mb_buf"):
+                st.mb_buf = np.empty(b, dtype=np.uint64)
+            buf = st.mb_buf
             buf[:rem] = q[n_full * b:]
             buf[rem:] = q[-1]
             yield buf
 
     def _lookup_shard(self, shard: LearnedIndex, q: np.ndarray,
                       backend: str, offset: int) -> np.ndarray:
-        """Per-shard fallback: micro-batched lookup of ``q`` (all routed to
-        ``shard``), global ``offset`` folded in on the host. Accelerated
-        backends dispatch every micro-batch eagerly and sync once."""
+        """Per-shard fallback: micro-batched *snapshot* lookup of ``q`` (all
+        routed to ``shard``), global ``offset`` folded in on the host; the
+        caller adds the delta adjustment. Accelerated backends dispatch
+        every micro-batch eagerly and sync once."""
         n = q.size
         b = self.block
         n_batches = -(-n // b)
@@ -329,26 +460,115 @@ class PlexService:
         return out + offset
 
     def lookup(self, q: np.ndarray, backend: str | None = None) -> np.ndarray:
-        """Global first-occurrence index per query key."""
+        """Global first-occurrence index per query key in the *logical*
+        (snapshot plus delta) key array."""
         backend = backend or self.default_backend
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         q = np.ascontiguousarray(q, dtype=np.uint64)
         if q.size == 0:
             return np.zeros(0, dtype=np.int64)
+        state = self._state       # one consistent (snapshot, delta) capture
         if backend == "jnp":
-            st = self.stacked_impl()
+            st = self.stacked_impl(state)
             if st is not None:
-                return self._stacked_lookup(st, q)
-        if self.n_shards == 1:
-            return self._lookup_shard(self.shards[0], q, backend, 0)
-        sid = self.route(q)
-        out = np.empty(q.size, dtype=np.int64)
-        for s in np.unique(sid):
-            mask = sid == s
-            out[mask] = self._lookup_shard(self.shards[s], q[mask], backend,
-                                           int(self.offsets[s]))
+                return self._stacked_lookup(st, q, state)
+        snap = state.snapshot
+        if snap.n_shards == 1:
+            out = self._lookup_shard(snap.shards[0], q, backend, 0)
+        else:
+            sid = snap.route(q)
+            out = np.empty(q.size, dtype=np.int64)
+            for s in np.unique(sid):
+                mask = sid == s
+                out[mask] = self._lookup_shard(snap.shards[s], q[mask],
+                                               backend,
+                                               int(snap.offsets[s]))
+        if not state.delta.empty:
+            out = out + state.delta.adjust(q)
         return out
+
+    # -- updates ------------------------------------------------------------
+    def insert(self, keys: np.ndarray) -> int:
+        """Buffer inserted keys (duplicates add logical occurrences).
+
+        Drains the submit queue first (queued lookups observe the
+        pre-update state) and triggers a merge once the delta exceeds
+        ``merge_threshold``. The hot-key cache needs no invalidation —
+        it stores delta-independent snapshot ranks. Returns the number of
+        keys buffered."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        if keys.size == 0:
+            return 0
+        with self._lock:
+            self.drain()
+            state = self._state
+            n = state.delta.insert(keys)
+            self.stats.inserts += n
+            self._after_update(state)
+            return n
+
+    def delete(self, keys: np.ndarray) -> int:
+        """Tombstone key values: every logical occurrence of each key
+        (snapshot and pending inserts) is removed. Returns the number of
+        occurrences removed."""
+        keys = np.asarray(keys, dtype=np.uint64).ravel()
+        if keys.size == 0:
+            return 0
+        with self._lock:
+            self.drain()
+            state = self._state
+            n = state.delta.delete(keys)
+            self.stats.deletes += n
+            self._after_update(state)
+            return n
+
+    def _after_update(self, state: _ServiceState) -> None:
+        # no cache invalidation needed: cached entries hold delta-
+        # independent snapshot ranks (the delta folds in after resolution)
+        if 0 < self.merge_threshold <= state.delta.n_entries:
+            self.merge()
+
+    def merge(self) -> bool:
+        """Fold the delta into a brand-new snapshot and swap it in.
+
+        The rebuild (spline + auto-tune + radix layer via ``build_plex``,
+        per shard) happens entirely off the hot path on the materialised
+        logical key array; only when the new snapshot is complete does the
+        single ``_state`` assignment publish it together with a fresh empty
+        delta — readers never see a half-built index. Starts a new stats
+        epoch. Returns ``True`` if a swap happened (``False`` for an empty
+        delta or an empty logical key set, which stays buffered)."""
+        with self._lock:
+            self.drain()
+            state = self._state
+            if state.delta.empty:
+                return False
+            t0 = time.perf_counter()
+            new_keys = state.delta.logical_keys()
+            if new_keys.size == 0:
+                # a snapshot cannot be empty; keep buffering until an
+                # insert arrives (lookups stay correct via the delta fold)
+                return False
+            snap = Snapshot.build(
+                new_keys, self.eps, n_shards=self._n_shards_req,
+                backend=self.default_backend, block=self.block,
+                devices=self._devices, epoch=state.snapshot.epoch + 1,
+                **self._build_kw)
+            # pre-warm the new snapshot's device pipelines while the old
+            # one still serves (only when the jnp path is actually in use),
+            # so the first post-swap lookup never pays a cold compile —
+            # warm time is merge/build work, not serving work
+            if state.snapshot.built_stacked() is not None:
+                self._warm_stacked(snap, self._delta_capacity)
+            # the atomic swap: one reference assignment publishes the new
+            # (snapshot, delta) pair
+            self._state = _ServiceState(
+                snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+            self.stats.merges += 1
+            self.stats.merge_s += time.perf_counter() - t0
+            self.stats.new_epoch(snap.epoch)
+            return True
 
     # -- continuous-stream queue --------------------------------------------
     def submit(self, q: np.ndarray) -> LookupTicket:
@@ -357,27 +577,66 @@ class PlexService:
         Queries from successive submits are packed into shared ``block``-
         sized micro-batches; full blocks dispatch immediately (async), and
         a sub-block remainder dispatches once the oldest queued query has
-        waited ``max_delay_s`` (checked on the next submit/drain — there is
-        no background thread). Uses the stacked jnp device path; when that
-        path (or the jnp backend) is unavailable the ticket is filled
-        synchronously."""
+        waited ``max_delay_s`` — enforced by a background timer thread, so
+        the deadline holds even when no further submit/drain call arrives.
+        Uses the stacked jnp device path; when that path (or the jnp
+        backend) is unavailable the ticket is filled synchronously."""
         q = np.ascontiguousarray(q, dtype=np.uint64)
         ticket = LookupTicket(self, q.size)
         if q.size == 0:
             return ticket
-        st = self.stacked_impl() if self.default_backend == "jnp" else None
-        if st is None:
-            ticket._out[:] = self.lookup(q)
-            ticket._filled = q.size
-            return ticket
-        now = time.monotonic()
-        self._q_chunks.append([ticket, q, 0, now])
-        self._q_len += q.size
-        self.stats.queries += q.size
-        self._flush_full(st)
-        if self._q_len and now - self._q_chunks[0][3] >= self.max_delay_s:
-            self._flush_partial(st)
+        with self._lock:
+            # capture the stacked path under the lock: mutations hold the
+            # same lock, so the queued dispatch can never pair this
+            # snapshot's planes with a different epoch's delta
+            st = (self.stacked_impl() if self.default_backend == "jnp"
+                  else None)
+            if st is None:
+                ticket._out[:] = self.lookup(q)
+                ticket._filled = q.size
+                return ticket
+            now = time.monotonic()
+            self._q_chunks.append([ticket, q, 0, now])
+            self._q_len += q.size
+            self.stats.queries += q.size
+            self._flush_full(st)
+            if self._q_len:
+                if now - self._q_chunks[0][3] >= self.max_delay_s:
+                    self._flush_partial(st)
+                else:
+                    self._arm_timer(self.max_delay_s
+                                    - (now - self._q_chunks[0][3]))
         return ticket
+
+    def _arm_timer(self, delay_s: float) -> None:
+        """Schedule the background deadline flush (one live timer at most;
+        must be called with the lock held)."""
+        if self._timer is not None:
+            return
+        t = threading.Timer(max(delay_s, 0.0), self._deadline_flush)
+        t.daemon = True
+        self._timer = t
+        t.start()
+
+    def _cancel_timer(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _deadline_flush(self) -> None:
+        """Timer-thread entry: flush (and drain) the queued remainder once
+        its deadline has expired, filling the pending tickets without any
+        further caller action; re-arm when woken early."""
+        with self._lock:
+            self._timer = None
+            if not self._q_len:
+                return
+            age = time.monotonic() - self._q_chunks[0][3]
+            if age < self.max_delay_s:
+                self._arm_timer(self.max_delay_s - age)
+                return
+            self._flush_partial(self.stacked_impl())
+            self._drain_outstanding()
 
     def _take_block(self, want: int) -> tuple[np.ndarray, list, int]:
         """Pop up to ``want`` queued queries into a fresh block buffer
@@ -404,8 +663,9 @@ class PlexService:
         if filled < self.block:
             buf[filled:] = buf[filled - 1]
         qh, ql = split_u64(buf)
-        out, hits = self._dispatch_planes(st, qh, ql)
-        self._outstanding.append((out, hits, pieces))
+        res = self._dispatch_planes(st, qh, ql, filled,
+                                    self._delta_view(self._state))
+        self._outstanding.append((res, pieces, self.stats.epoch))
         self.stats.batches += 1
         self.stats.padded_lanes += self.block - filled
 
@@ -420,30 +680,65 @@ class PlexService:
             buf, pieces, filled = self._take_block(self._q_len)
             self._dispatch_queue_block(st, buf, pieces, filled)
 
+    def _drain_outstanding(self) -> None:
+        """Sync every in-flight queued batch and fill its tickets (lock
+        held by the caller)."""
+        if not self._outstanding:
+            return
+        for res, pieces, epoch in self._outstanding:
+            arr = np.asarray(res.out)       # sync
+            for ticket, src, dst, cnt in pieces:
+                ticket._out[dst:dst + cnt] = arr[src:src + cnt]
+                ticket._filled += cnt
+            self._note_synced(res, epoch)
+        self.stats.note_drained(len(self._outstanding))
+        self._outstanding.clear()
+
     def drain(self) -> None:
         """Flush the queued sub-block remainder and sync every in-flight
         batch, filling all pending tickets. The service's single blocking
         point: everything before it is async dispatch."""
-        if self._q_len:
-            self._flush_partial(self.stacked_impl())
-        if not self._outstanding:
-            return
-        for out, hits, pieces in self._outstanding:
-            arr = np.asarray(out)       # sync
-            for ticket, src, dst, cnt in pieces:
-                ticket._out[dst:dst + cnt] = arr[src:src + cnt]
-                ticket._filled += cnt
-            if hits is not None:
-                self.stats.cache_hits += int(hits)
-        self.stats.note_drained(len(self._outstanding))
-        self._outstanding.clear()
+        with self._lock:
+            self._cancel_timer()
+            if self._q_len:
+                self._flush_partial(self.stacked_impl())
+            self._drain_outstanding()
+
+    def _warm_stacked(self, snap: Snapshot, delta_cap: int | None) -> bool:
+        """Compile the exact serving dispatch for ``snap`` — same batch
+        sharding layout and cache state as the micro-batch pipeline — plus,
+        when ``delta_cap`` is given, the merged variant at that capacity
+        (warmed with a zero-weight dummy entry, which leaves every result
+        untouched). Does not touch the stats; returns False when the shards
+        did not unify."""
+        st = snap.stacked_impl(block=self.block, probe=self.probe,
+                               cache_slots=self.cache_slots)
+        if st is None:
+            return False
+        qh, ql = split_u64(np.repeat(snap.keys[:1], self.block))
+        qhi = jax.device_put(qh, self._batch_sharding)
+        qlo = jax.device_put(ql, self._batch_sharding)
+        jax.block_until_ready(st.lookup_planes(qhi, qlo, n_valid=1).out)
+        if delta_cap:
+            from ..kernels.planes import build_delta_planes
+            dummy = build_delta_planes(snap.keys[:1],
+                                       np.zeros(1, np.int64), delta_cap)
+            jax.block_until_ready(
+                st.lookup_planes(qhi, qlo, n_valid=1, delta=dummy).out)
+        return True
 
     def warmup(self, backend: str | None = None) -> None:
+        """Force jit compilation of every dispatch the serving path can
+        take in this epoch: the delta-free pipeline and the merged pipeline
+        at the standing delta capacity — so neither the first update nor a
+        queue flush on the deadline timer thread ever hits a cold
+        compile."""
         backend = backend or self.default_backend
         if backend == "jnp":
-            st = self.stacked_impl()
-            if st is not None:
-                st.lookup(self.keys[:1])
+            state = self._state
+            dv = self._delta_view(state)
+            cap = dv.cap if dv is not None else self._delta_capacity
+            if self._warm_stacked(state.snapshot, cap):
                 return
         for shard in self.shards:
             shard.warmup(backend)

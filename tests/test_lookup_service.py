@@ -130,15 +130,20 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     rows = sb.run()
     assert any(r.startswith("serve,tiny,") for r in rows)
     records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
-    # one uniform record per backend + one zipf record (cached jnp path)
-    assert len(records) == len(BACKENDS) + 1
+    # one uniform record per backend + one zipf + one update_mix (jnp path)
+    assert len(records) == len(BACKENDS) + 2
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
+    extra = {"zipf": {"cache_hit_rate"},
+             "update_mix": {"write_frac", "merges"}}
     for rec in records:
-        want = base | ({"cache_hit_rate"} if rec["workload"] == "zipf"
-                       else set())
-        assert set(rec) == want
-        assert rec["n"] == keys.size
+        assert set(rec) == base | extra.get(rec["workload"], set())
         assert rec["ns_per_lookup"] > 0
     zipf = [r for r in records if r["workload"] == "zipf"]
     assert len(zipf) == 1 and 0.0 <= zipf[0]["cache_hit_rate"] <= 1.0
+    um = [r for r in records if r["workload"] == "update_mix"]
+    assert len(um) == 1
+    assert um[0]["write_frac"] == sb.UPDATE_MIX_WRITE_FRAC
+    assert um[0]["merges"] >= 0
+    # merges are build work: the build_s column carries the rebuild time
+    assert um[0]["build_s"] > 0

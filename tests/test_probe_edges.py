@@ -1,0 +1,160 @@
+"""Edge-case coverage for the device probe + dynamic-shift primitives:
+eps=1 windows, single-segment shards, duplicate-heavy probe windows, and
+queries at shard-minima boundaries (including through the merged path)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BACKENDS, LearnedIndex
+from repro.kernels.pairs import join_u64, pair_shr_dyn, split_u64
+from repro.kernels.plex_segment_lookup import probe_lower_bound
+from repro.serving import PlexService
+
+from conftest import sorted_u64
+
+
+# ------------------------------------------------- probe_lower_bound ----
+
+def _probe(dkeys, q, base, window, mode):
+    dh, dl = map(jnp.asarray, split_u64(dkeys))
+    qh, ql = map(jnp.asarray, split_u64(q))
+    b = jnp.asarray(np.asarray(base, np.int32))
+    return np.asarray(probe_lower_bound(qh, ql, dh, dl, b, window=window,
+                                        mode=mode))
+
+
+@pytest.mark.parametrize("mode", ["count", "bisect"])
+def test_probe_duplicate_heavy_window(mode):
+    """A window that is one long duplicate run (plus a second run) still
+    resolves exact first-occurrence lower bounds in both probe modes."""
+    dkeys = np.concatenate([np.full(64, 5, np.uint64),
+                            np.full(64, 9, np.uint64)])
+    q = np.asarray([0, 3, 5, 6, 7, 9, 10], np.uint64)
+    want = np.searchsorted(dkeys, q, side="left")
+    got = _probe(dkeys, q, np.zeros(q.size), window=128, mode=mode)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", ["count", "bisect"])
+def test_probe_all_below_saturates_past_window(mode):
+    """Every window key < q => base + window (the searchsorted past-the-end
+    contract callers clamp with finalize_indices)."""
+    dkeys = np.arange(128, dtype=np.uint64)
+    q = np.full(4, 1 << 32, np.uint64)
+    got = _probe(dkeys, q, np.zeros(4), window=128, mode=mode)
+    assert np.array_equal(got, np.full(4, 128))
+
+
+@pytest.mark.parametrize("mode", ["count", "bisect"])
+def test_probe_nonzero_base_and_max_key_pad(mode):
+    """Bases offset into the plane and u64-max padding behave like the
+    stacked data planes (pads never counted below any real query)."""
+    dkeys = np.concatenate([np.arange(100, dtype=np.uint64) * 3,
+                            np.full(156, np.iinfo(np.uint64).max,
+                                    np.uint64)])
+    rng = np.random.default_rng(3)
+    q = rng.integers(0, 320, 64, dtype=np.uint64)
+    base = np.clip(np.searchsorted(dkeys, q).astype(np.int64) - 40, 0,
+                   dkeys.size - 128)
+    want = np.maximum(np.searchsorted(dkeys, q, side="left"), base)
+    got = _probe(dkeys, q, base, window=128, mode=mode)
+    assert np.array_equal(got, want)
+
+
+def test_probe_modes_agree_random_duplicates(rng):
+    dkeys = np.sort(rng.integers(0, 50, 256, dtype=np.uint64))
+    q = rng.integers(0, 55, 200, dtype=np.uint64)
+    base = np.zeros(q.size)
+    count = _probe(dkeys, q, base, window=256, mode="count")
+    bisect = _probe(dkeys, q, base, window=256, mode="bisect")
+    assert np.array_equal(count, bisect)
+    assert np.array_equal(count, np.searchsorted(dkeys, q, side="left"))
+
+
+# ------------------------------------------------------ pair_shr_dyn ----
+
+def test_pair_shr_dyn_full_word_patterns():
+    """s=0 (carry must be masked out) and s=32 (word switch) on all-ones
+    words — the two spots where an unmasked XLA shift would poison lanes."""
+    hi = jnp.full(4, 0xFFFFFFFF, jnp.uint32)
+    lo = jnp.asarray([0, 1, 0xFFFFFFFF, 0x80000000], jnp.uint32)
+    for s in (0, 31, 32, 63):
+        x = join_u64(np.asarray(hi), np.asarray(lo))
+        want = ((x >> np.uint64(s)) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        got = np.asarray(pair_shr_dyn(hi, lo, jnp.full(4, s, jnp.int32)))
+        assert np.array_equal(got, want), s
+
+
+def test_pair_shr_dyn_adjacent_lane_isolation(rng):
+    """Adjacent lanes with different shifts never contaminate each other
+    (the stacked path gathers a per-shard shift per lane)."""
+    x = rng.integers(0, 1 << 64, 128, dtype=np.uint64)
+    h, l = map(jnp.asarray, split_u64(x))
+    s = np.tile(np.asarray([0, 1, 32, 63]), 32)
+    want = ((x >> s.astype(np.uint64)) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32)
+    got = np.asarray(pair_shr_dyn(h, l, jnp.asarray(s, jnp.int32)))
+    assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------- eps=1 indexes ----
+
+def test_eps_one_index_parity(rng):
+    keys = sorted_u64(rng, 8_000, dups=True)
+    q = keys[rng.integers(0, keys.size, 2_000)]
+    want = np.searchsorted(keys, q, side="left")
+    idx = LearnedIndex.build(keys, eps=1)
+    for backend in BACKENDS:
+        assert np.array_equal(idx.lookup(q, backend=backend), want), backend
+
+
+def test_eps_one_sharded_service(rng):
+    keys = np.unique(sorted_u64(rng, 20_000))
+    svc = PlexService(keys, eps=1, n_shards=3, block=512)
+    q = np.concatenate([keys[rng.integers(0, keys.size, 1_000)],
+                        rng.integers(keys[0], keys[-1], 500,
+                                     dtype=np.uint64)])
+    want = np.searchsorted(keys, q, side="left")
+    for backend in ("numpy", "jnp"):
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+# -------------------------------------------- single-segment shards ------
+
+def test_single_segment_shards_stacked(rng):
+    """Perfectly linear shards collapse to a 2-point spline (one segment);
+    the stacked clamp to n_spline - 2 = 0 must hold on every path."""
+    n = 4_096
+    keys = (np.arange(2 * n, dtype=np.uint64) * np.uint64(977)
+            + np.uint64(1 << 33))
+    svc = PlexService(keys, eps=256, n_shards=2, block=512)
+    n_spline = {s.plex.spline.keys.size for s in svc.shards}
+    assert n_spline == {2}, "keys not linear enough to collapse the spline"
+    assert svc.stacked_impl() is not None
+    q = np.concatenate([keys[rng.integers(0, keys.size, 1_000)],
+                        keys[:500] + np.uint64(1),       # absent, mid-gap
+                        np.asarray([0], np.uint64),
+                        keys[-1:] + np.uint64(5)])
+    want = np.searchsorted(keys, q, side="left")
+    for backend in ("numpy", "jnp"):
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+# --------------------------------------- shard-minima boundary queries ----
+
+def test_shard_minima_queries_with_live_delta(rng):
+    """Queries at and adjacent to every shard minimum stay exact through
+    the merged (snapshot + delta) path — the routing plane is snapshot-
+    keyed, so delta keys must not perturb boundary resolution."""
+    keys = np.unique(sorted_u64(rng, 30_000))
+    svc = PlexService(keys, eps=16, n_shards=4, block=512, merge_threshold=0)
+    mins = svc.shard_min.copy()
+    # insert a duplicate of one boundary key and delete another boundary key
+    svc.insert(np.asarray([mins[1]], np.uint64))
+    svc.delete(np.asarray([mins[2]], np.uint64))
+    model = np.sort(np.concatenate([keys[keys != mins[2]],
+                                    np.asarray([mins[1]], np.uint64)]))
+    q = np.concatenate([mins, mins - 1, mins + 1])
+    want = np.searchsorted(model, q, side="left")
+    for backend in ("numpy", "jnp"):
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend

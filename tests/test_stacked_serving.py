@@ -95,7 +95,7 @@ def test_stacked_unification_gates(rng):
 def test_service_falls_back_when_not_unifiable(rng, monkeypatch):
     keys = sorted_u64(rng, 30_000)
     svc = PlexService(keys, eps=16, n_shards=3, block=512)
-    monkeypatch.setattr(svc, "stacked_impl", lambda: None)
+    monkeypatch.setattr(svc, "stacked_impl", lambda *a, **k: None)
     q = keys[rng.integers(0, keys.size, 2_000)]
     got = svc.lookup(q, backend="jnp")
     assert np.array_equal(got, np.searchsorted(keys, q, side="left"))
@@ -283,6 +283,46 @@ def test_bench_diff_regression_gate(tmp_path):
     assert main([str(tmp_path / "old.json"), str(tmp_path / "bad.json")]) == 1
     assert main([str(tmp_path / "old.json"), str(tmp_path / "bad.json"),
                  "--threshold", "0.5"]) == 0
+
+
+def test_bench_diff_write_frac_keys_never_collide(tmp_path):
+    """update_mix records with different write fractions are distinct keys
+    (schema-additive: legacy records without write_frac still match)."""
+    from benchmarks.bench_diff import diff, load
+    old = [_rec(workload="update_mix", ns=100.0) | {"write_frac": 0.1},
+           _rec(ns=100.0)]
+    new = [_rec(workload="update_mix", ns=500.0) | {"write_frac": 0.5},
+           _rec(ns=100.0)]
+    (tmp_path / "old.json").write_text(json.dumps(old))
+    (tmp_path / "new.json").write_text(json.dumps(new))
+    lines, regressions = diff(load(tmp_path / "old.json"),
+                              load(tmp_path / "new.json"), 0.15)
+    assert not regressions        # different mixes never compared
+    assert any("new record" in ln for ln in lines)
+    assert any("dropped" in ln for ln in lines)
+
+
+def test_update_mix_stream_deterministic_and_mixed(rng):
+    from benchmarks.serve_bench import update_mix_stream
+    keys = np.unique(sorted_u64(rng, 20_000))
+    ops, model = update_mix_stream(keys, 10_000, write_frac=0.2, rounds=4,
+                                   seed=5)
+    assert len(ops) == 4
+    n_reads = sum(r.size for _, _, r in ops)
+    n_writes = sum(i.size + d.size for i, d, _ in ops)
+    assert n_reads == 10_000
+    assert 0.05 < n_writes / (n_reads + n_writes) < 0.35
+    # the final model reflects tombstone-over-everything semantics
+    check = keys.copy()
+    for ins, dels, _ in ops:
+        check = np.sort(np.concatenate([check, ins]))
+        check = check[~np.isin(check, dels)]
+    assert np.array_equal(model, check)
+    ops2, model2 = update_mix_stream(keys, 10_000, write_frac=0.2, rounds=4,
+                                     seed=5)
+    assert np.array_equal(model, model2)
+    assert all(np.array_equal(a, b) for x, y in zip(ops, ops2)
+               for a, b in zip(x, y))
 
 
 def test_zipf_queries_skew_and_absent(rng):

@@ -1,0 +1,410 @@
+"""Updatable PLEX: immutable snapshots, device-resident delta buffer,
+merged lookup parity, threshold merges, atomic swap, per-epoch stats, the
+background deadline flush, and the cache fast path."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BACKENDS, Snapshot
+from repro.serving import DeltaBuffer, PlexService
+
+from conftest import sorted_u64
+
+
+def _unique_u64(rng, n, spread=62):
+    return np.unique(sorted_u64(rng, n + n // 4, spread=spread))[:n]
+
+
+def _model_apply(model: np.ndarray, *, ins=None, dels=None) -> np.ndarray:
+    """Reference logical-key evolution: tombstones remove every occurrence
+    of a key value; inserts add occurrences."""
+    if dels is not None and len(dels):
+        model = model[~np.isin(model, dels)]
+    if ins is not None and len(ins):
+        model = np.sort(np.concatenate([model, ins]))
+    return model
+
+
+# ------------------------------------------------------------ snapshot ----
+
+def test_snapshot_arrays_frozen(rng):
+    keys = sorted_u64(rng, 10_000)
+    snap = Snapshot.build(keys, eps=16, n_shards=2)
+    with pytest.raises(ValueError):
+        snap.keys[0] = 1
+    with pytest.raises(ValueError):
+        snap.shard_min[0] = 1
+    for shard in snap.shards:
+        with pytest.raises(ValueError):
+            shard.plex.spline.keys[0] = 1
+    # built_stacked is a side-effect-free peek
+    assert snap.built_stacked() is None
+    assert snap.stacked_impl(block=512) is not None
+    assert snap.built_stacked() is snap.stacked_impl(block=512)
+
+
+def test_service_snapshot_ownership(rng):
+    """The service's read-only state all hangs off the swapped snapshot."""
+    keys = sorted_u64(rng, 20_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=512)
+    snap = svc._state.snapshot
+    assert svc.keys is snap.keys
+    assert svc.offsets is snap.offsets
+    assert svc.n_shards == snap.n_shards == 2
+    assert svc.size_bytes == snap.size_bytes
+    assert svc.epoch == 0 and svc.n_pending == 0
+    assert svc.n_keys == keys.size
+
+
+# -------------------------------------------------------- delta buffer ----
+
+def test_delta_buffer_algebra(rng):
+    keys = np.unique(sorted_u64(rng, 5_000, dups=True))
+    dup = np.repeat(keys[100], 3)
+    snap_keys = np.sort(np.concatenate([keys, dup]))
+    d = DeltaBuffer(snap_keys)
+    assert d.empty and d.net_keys == 0
+
+    assert d.insert(np.asarray([keys[10], keys[10], keys[50] + 1],
+                               np.uint64)) == 3
+    assert d.n_inserts == 3 and d.net_keys == 3
+    # tombstone a 4-occurrence run: removes all of them
+    removed = d.delete(np.asarray([keys[100]], np.uint64))
+    assert removed == 4
+    # delete kills pending inserts too
+    assert d.delete(np.asarray([keys[10]], np.uint64)) == 2 + 1
+    # absent key: pure no-op, not stored
+    n_before = d.n_entries
+    assert d.delete(np.asarray([keys[-1] + 9], np.uint64)) == 0
+    assert d.n_entries == n_before
+    # insert-after-delete is live again
+    d.insert(np.asarray([keys[100]], np.uint64))
+    model = _model_apply(snap_keys, dels=[keys[100], keys[10]],
+                         ins=[keys[50] + 1, keys[100]])
+    q = np.concatenate([keys[:200], [keys[100], keys[10], keys[50] + 1]])
+    want = np.searchsorted(model, q, "left")
+    snap_rank = np.searchsorted(snap_keys, q, "left")
+    assert np.array_equal(snap_rank + d.adjust(q), want)
+
+
+def test_delta_device_view_capacity_grows_geometrically(rng):
+    keys = _unique_u64(rng, 4_000)
+    d = DeltaBuffer(keys)
+    d.insert(rng.integers(0, 1 << 62, 100, dtype=np.uint64))
+    assert d.device_view().cap == 128
+    d.insert(rng.integers(0, 1 << 62, 200, dtype=np.uint64))
+    assert d.device_view().cap == 512      # grew past 256 via doubling
+    # never shrinks within the epoch
+    assert d.device_view().cap == 512
+
+
+# ------------------------------------------- merged-lookup parity ----------
+
+def test_merged_parity_after_interleaved_updates(rng):
+    """Acceptance: after any interleaving of inserts, deletes, and merges,
+    lookup(q) == np.searchsorted(logical_keys, q) for present and absent
+    keys on both numpy and jnp backends."""
+    keys = _unique_u64(rng, 30_000)
+    svc = PlexService(keys, eps=16, n_shards=3, block=512,
+                      merge_threshold=0)        # no auto-merge
+    model = keys.copy()
+
+    def check():
+        logical = svc.logical_keys()
+        assert np.array_equal(logical, model)
+        present = model[rng.integers(0, model.size, 1_500)]
+        gaps = model[rng.integers(0, model.size - 1, 500)]
+        absent = gaps + (model[np.searchsorted(model, gaps) + 1] - gaps) // 2
+        below = np.asarray([0], np.uint64)
+        above = model[-1:] + np.uint64(7)
+        q = np.concatenate([present, absent, below, above])
+        want = np.searchsorted(model, q, "left")
+        for backend in ("numpy", "jnp"):
+            got = svc.lookup(q, backend=backend)
+            assert np.array_equal(got, want), backend
+
+    check()
+    for step in range(4):
+        ins = rng.integers(0, 1 << 62, 400, dtype=np.uint64)
+        svc.insert(ins)
+        model = _model_apply(model, ins=ins)
+        check()
+        dels = np.concatenate([
+            model[rng.integers(0, model.size, 150)],        # present
+            rng.integers(0, 1 << 62, 20, dtype=np.uint64)])  # mostly absent
+        svc.delete(dels)
+        model = _model_apply(model, dels=dels)
+        check()
+        if step % 2 == 1:
+            assert svc.merge()
+            assert svc.n_pending == 0
+            assert np.array_equal(svc.keys, model)
+            check()
+
+
+def test_merged_parity_three_backends(rng):
+    keys = _unique_u64(rng, 6_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=256, merge_threshold=0)
+    ins = rng.integers(0, 1 << 62, 60, dtype=np.uint64)
+    dels = keys[rng.integers(0, keys.size, 40)]
+    svc.insert(ins)
+    svc.delete(dels)
+    model = _model_apply(keys, ins=ins[~np.isin(ins, dels)], dels=dels)
+    q = np.concatenate([model[rng.integers(0, model.size, 400)],
+                        ins[:30], dels[:20]])
+    want = np.searchsorted(model, q, "left")
+    for backend in BACKENDS:
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+def test_merged_lookup_duplicate_runs(rng):
+    """Tombstoning a duplicate run removes every occurrence; inserting
+    duplicates adds occurrences — first-occurrence semantics stay exact
+    for present keys."""
+    run = np.full(500, 1 << 40, np.uint64)
+    keys = np.sort(np.concatenate([_unique_u64(rng, 8_000), run]))
+    svc = PlexService(keys, eps=16, n_shards=2, block=256, merge_threshold=0)
+    n_run = int((keys == (1 << 40)).sum())
+    assert svc.delete(np.asarray([1 << 40], np.uint64)) == n_run
+    model = keys[keys != (1 << 40)]
+    dup_ins = np.full(3, keys[1_000], np.uint64)
+    svc.insert(dup_ins)
+    model = _model_apply(model, ins=dup_ins)
+    q = model[rng.integers(0, model.size, 1_000)]
+    want = np.searchsorted(model, q, "left")
+    for backend in ("numpy", "jnp"):
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+def test_merged_one_dispatch_per_microbatch(rng):
+    """Acceptance: merged lookup (snapshot + live delta) still costs exactly
+    one jit dispatch per micro-batch."""
+    keys = _unique_u64(rng, 40_000)
+    svc = PlexService(keys, eps=32, n_shards=4, block=512, merge_threshold=0)
+    assert svc.n_shards == 4
+    ins = rng.integers(0, 1 << 62, 300, dtype=np.uint64)
+    dels = keys[rng.integers(0, keys.size, 100)]
+    svc.insert(ins)
+    svc.delete(dels)
+    model = _model_apply(keys, ins=ins[~np.isin(ins, dels)], dels=dels)
+    st = svc.stacked_impl()
+    svc.lookup(keys[:1])                    # compile the merged variant
+    cap = svc._state.delta.device_view().cap
+    calls = []
+    orig = st._merged_fns[cap]
+    st._merged_fns[cap] = lambda *a: (calls.append(1), orig(*a))[1]
+    q = model[rng.integers(0, model.size, 3 * 512 + 100)]  # 4 micro-batches
+    got = svc.lookup(q, backend="jnp")
+    assert np.array_equal(got, np.searchsorted(model, q, "left"))
+    assert len(calls) == 4
+    assert svc.stats.inflight_batches == 0
+
+
+def test_fallback_path_applies_delta(rng, monkeypatch):
+    keys = _unique_u64(rng, 20_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=512, merge_threshold=0)
+    ins = rng.integers(0, 1 << 62, 50, dtype=np.uint64)
+    svc.insert(ins)
+    model = _model_apply(keys, ins=ins)
+    monkeypatch.setattr(svc, "stacked_impl", lambda *a, **k: None)
+    q = np.concatenate([keys[:500], ins])
+    got = svc.lookup(q, backend="jnp")
+    assert np.array_equal(got, np.searchsorted(model, q, "left"))
+
+
+# ----------------------------------------------- merge + atomic swap ------
+
+def test_threshold_triggered_merge_and_swap(rng):
+    keys = _unique_u64(rng, 20_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=512, merge_threshold=256)
+    old_snap = svc._state.snapshot
+    ins = rng.integers(0, 1 << 62, 300, dtype=np.uint64)   # > threshold
+    svc.insert(ins)
+    assert svc.stats.merges == 1
+    assert svc.epoch == 1 and svc.n_pending == 0
+    assert svc._state.snapshot is not old_snap
+    # old snapshot untouched and still frozen (readers finish undisturbed)
+    assert old_snap.keys.size == keys.size
+    assert not old_snap.keys.flags.writeable
+    model = _model_apply(keys, ins=ins)
+    assert np.array_equal(svc.keys, model)
+    q = model[rng.integers(0, model.size, 2_000)]
+    assert np.array_equal(svc.lookup(q), np.searchsorted(model, q, "left"))
+    assert svc.stats.merge_s > 0
+
+
+def test_merge_empty_logical_set_stays_buffered(rng):
+    keys = _unique_u64(rng, 600)
+    svc = PlexService(keys, eps=16, block=128, merge_threshold=0)
+    svc.delete(keys)
+    assert svc.n_keys == 0
+    assert not svc.merge()                 # a snapshot cannot be empty
+    q = np.concatenate([keys[:50], keys[-1:] + 3])
+    assert np.array_equal(svc.lookup(q, backend="numpy"),
+                          np.zeros(q.size, np.int64))
+    svc.insert(keys[:100])
+    assert svc.merge()
+    assert np.array_equal(svc.keys, keys[:100])
+
+
+def test_updates_drain_queue_first(rng):
+    """Queued lookups observe the pre-update state: insert() linearises
+    after every previously submitted ticket."""
+    keys = _unique_u64(rng, 10_000)
+    svc = PlexService(keys, eps=16, block=512, max_delay_s=60.0,
+                      merge_threshold=0)
+    svc.warmup()
+    t = svc.submit(keys[:100])
+    assert not t.ready
+    svc.insert(keys[:1] - 1)
+    assert t.ready                          # drained by the update
+    assert np.array_equal(t.result(), np.arange(100))
+
+
+# --------------------------------------------- per-epoch stats + cache ----
+
+def test_epoch_stats_reset_on_swap(rng):
+    keys = _unique_u64(rng, 20_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=512,
+                      cache_slots=1 << 12, merge_threshold=256)
+    hot = keys[rng.integers(0, 32, 2_048)]
+    svc.lookup(hot)
+    svc.lookup(hot)
+    assert svc.stats.cache_hits > 0
+    assert 0.0 < svc.stats.cache_hit_rate <= 1.0
+    svc.insert(rng.integers(0, 1 << 62, 300, dtype=np.uint64))  # merges
+    assert svc.stats.merges == 1
+    assert svc.stats.epoch == 1
+    assert svc.stats.cache_queries == 0
+    assert svc.stats.cache_hits == 0
+    assert svc.stats.cache_hit_rate == 0.0
+    # and the new epoch counts cleanly
+    svc.lookup(hot)
+    assert svc.stats.cache_queries == hot.size
+
+
+def test_cache_accounting_excludes_padded_lanes(rng):
+    keys = _unique_u64(rng, 10_000)
+    svc = PlexService(keys, eps=16, block=512, cache_slots=1 << 12)
+    q = keys[rng.integers(0, keys.size, 100)]     # 412 padded lanes
+    svc.lookup(q)
+    assert svc.stats.cache_queries == 100         # not 512
+    svc.lookup(q)
+    assert svc.stats.cache_queries == 200
+    assert svc.stats.cache_hits <= 200
+
+
+def test_cache_full_hit_fast_path(rng):
+    """A micro-batch whose valid lanes all hit takes the lax.cond fast
+    branch (counted in full_hit_batches) and stays bit-identical."""
+    keys = _unique_u64(rng, 10_000)
+    svc = PlexService(keys, eps=16, block=512, cache_slots=1 << 13)
+    q = keys[rng.integers(0, 8, 512)]             # one exact block, 8 hot keys
+    want = np.searchsorted(keys, q, "left")
+    assert np.array_equal(svc.lookup(q), want)    # cold fill
+    assert svc.stats.full_hit_batches == 0
+    assert np.array_equal(svc.lookup(q), want)    # warm: every lane hits
+    assert svc.stats.full_hit_batches == 1
+    # cached entries are delta-independent snapshot ranks: the same batch
+    # still full-hits after an update, and results track the delta fold
+    svc.insert(np.asarray([q.min() - 1], np.uint64))
+    model = _model_apply(keys, ins=[q.min() - 1])
+    assert np.array_equal(svc.lookup(q), np.searchsorted(model, q, "left"))
+    assert svc.stats.full_hit_batches == 2
+
+
+def test_concurrent_readers_see_consistent_states(rng):
+    """The atomic-swap contract under fire: lock-free readers racing a
+    single writer (inserts + deletes + threshold merges) must always
+    return a result equal to searchsorted over *some* published logical
+    state — never a torn mix of one epoch's snapshot with another's
+    delta."""
+    import threading
+
+    keys = _unique_u64(rng, 20_000)
+    svc = PlexService(keys, eps=16, n_shards=2, block=512,
+                      merge_threshold=300)
+    svc.warmup()
+    models = [keys.copy()]
+    models_lock = threading.Lock()
+    stop = threading.Event()
+    errors: list = []
+
+    def writer():
+        wrng = np.random.default_rng(1)
+        try:
+            for _ in range(8):
+                ins = wrng.integers(0, 1 << 62, 60, dtype=np.uint64)
+                with models_lock:
+                    m = np.sort(np.concatenate([models[-1], ins]))
+                    models.append(m)
+                svc.insert(ins)
+                dels = m[wrng.integers(0, m.size, 25)]
+                with models_lock:
+                    models.append(m[~np.isin(m, dels)])
+                svc.delete(dels)
+        except Exception as e:      # pragma: no cover - diagnostic
+            errors.append(("writer", repr(e)))
+        finally:
+            stop.set()
+
+    def reader(tid):
+        rrng = np.random.default_rng(100 + tid)
+        try:
+            while not stop.is_set():
+                with models_lock:
+                    # the writer publishes each model just before applying
+                    # it, so the service can lag the list by one entry
+                    lo = max(len(models) - 2, 0)
+                base = models[lo]
+                q = base[rrng.integers(0, base.size, 700)]   # tail staging
+                got = svc.lookup(q, backend="jnp" if tid == 0 else "numpy")
+                with models_lock:
+                    candidates = models[lo:]
+                if not any(np.array_equal(got,
+                                          np.searchsorted(m, q, "left"))
+                           for m in candidates):
+                    errors.append((f"reader{tid}", "torn state"))
+                    stop.set()
+                    return
+        except Exception as e:      # pragma: no cover - diagnostic
+            errors.append((f"reader{tid}", repr(e)))
+            stop.set()
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert svc.stats.merges >= 1
+    assert np.array_equal(svc.logical_keys(), models[-1])
+
+
+# ------------------------------------------- background deadline flush ----
+
+def test_background_deadline_flush_fills_tickets(rng):
+    keys = _unique_u64(rng, 10_000)
+    svc = PlexService(keys, eps=16, block=512, max_delay_s=0.05)
+    svc.warmup()            # compile the dispatch the timer thread will use
+    t = svc.submit(keys[:100])
+    assert not t.ready
+    deadline = time.monotonic() + 5.0
+    while not t.ready and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert t.ready, "deadline timer did not flush the queued remainder"
+    assert np.array_equal(t.result(), np.arange(100))
+    assert svc.stats.inflight_batches == 0
+
+
+def test_drain_cancels_timer(rng):
+    keys = _unique_u64(rng, 5_000)
+    svc = PlexService(keys, eps=16, block=512, max_delay_s=30.0)
+    svc.warmup()
+    t = svc.submit(keys[:64])
+    assert svc._timer is not None
+    svc.drain()
+    assert svc._timer is None
+    assert t.ready
