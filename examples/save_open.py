@@ -1,0 +1,76 @@
+"""Durable PLEX serving: build -> mutate -> save -> "kill" -> open -> serve.
+
+Demonstrates the persistence lifecycle: a service is built from raw keys
+once, takes some inserts/deletes, and persists itself (snapshot generation
++ delta WAL + manifest). The process "restart" is simulated by dropping
+every in-memory object; ``PlexService.open`` then warm-starts from disk in
+load time — the snapshot planes are memmapped, no spline scan or auto-tune
+runs, and the live delta comes back from the WAL — and keeps serving (and
+logging updates, and rotating generations at merges).
+
+    PYTHONPATH=src python examples/save_open.py [--n 1000000] [--dir DIR]
+"""
+import argparse
+import pathlib
+import shutil
+import time
+
+import numpy as np
+
+from repro.data import generate
+from repro.serving import PlexService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--eps", type=int, default=64)
+    ap.add_argument("--dataset", default="osm",
+                    choices=["amzn", "face", "osm", "wiki"])
+    ap.add_argument("--dir", default="/tmp/plex-durable")
+    args = ap.parse_args()
+
+    root = pathlib.Path(args.dir)
+    shutil.rmtree(root, ignore_errors=True)
+    keys = generate(args.dataset, args.n)
+    rng = np.random.default_rng(0)
+
+    # ---- process 1: cold build, some updates, save --------------------
+    t0 = time.perf_counter()
+    svc = PlexService(keys.copy(), eps=args.eps)
+    build_wall = time.perf_counter() - t0
+    svc.insert(rng.integers(keys[0], keys[-1], 2_000, dtype=np.uint64))
+    svc.delete(keys[rng.integers(0, keys.size, 500)])
+    model = svc.logical_keys().copy()
+    svc.save(root)
+    print(f"built {args.n:,} keys in {build_wall:.2f}s, "
+          f"{svc.n_pending} delta entries pending; saved generation "
+          f"{svc.generation} -> {root}")
+    svc.close()
+    del svc                                     # the "kill"
+
+    # ---- process 2: warm start from disk ------------------------------
+    svc = PlexService.open(root)                # manifest -> snapshot + WAL
+    print(f"reopened in {svc.load_s*1e3:.1f}ms "
+          f"({build_wall / svc.load_s:.0f}x faster than the build); "
+          f"{svc.n_pending} delta entries replayed from the WAL")
+
+    q = model[rng.integers(0, model.size, 200_000)]
+    t0 = time.perf_counter()
+    got = svc.lookup(q, backend="jnp")
+    first = time.perf_counter() - t0
+    assert np.array_equal(got, np.searchsorted(model, q, side="left"))
+    print(f"first post-open batch: {first*1e3:.1f}ms "
+          f"(jit compile + dispatch); merged lookups verified")
+
+    # updates keep flowing to the recovered WAL; a merge rotates the
+    # on-disk generation before the in-memory swap (crash-safe)
+    svc.insert(rng.integers(keys[0], keys[-1], 1_000, dtype=np.uint64))
+    svc.merge()
+    print(f"after merge: durable generation {svc.generation}, "
+          f"epoch {svc.epoch}, {svc.n_keys:,} logical keys")
+    svc.close()
+
+
+if __name__ == "__main__":
+    main()

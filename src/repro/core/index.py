@@ -171,7 +171,7 @@ class Snapshot:
 
     def __init__(self, keys: np.ndarray, eps: int, offsets: np.ndarray,
                  shards: Sequence[LearnedIndex], *, build_s: float = 0.0,
-                 epoch: int = 0):
+                 epoch: int = 0, host_planes_fn: Any = None):
         self.keys = keys
         self.eps = int(eps)
         self.offsets = offsets
@@ -185,6 +185,12 @@ class Snapshot:
         self._stacked = None
         self._stacked_cfg = None
         self._stacked_built = False
+        # durable warm-start hook (persist.format): a thunk yielding the
+        # per-shard host planes straight from a memmapped snapshot file, so
+        # the stacked build skips every host-side re-derivation. Invoked
+        # per stacked build and NOT cached: the planes are device-uploaded
+        # copies, and pinning host copies too would double resident memory
+        self._host_planes_fn = host_planes_fn
 
     @classmethod
     def build(cls, keys: np.ndarray, eps: int, *, n_shards: int | None = None,
@@ -258,9 +264,11 @@ class Snapshot:
         cfg = (block, probe, cache_slots)
         if not self._stacked_built or self._stacked_cfg != cfg:
             from ..kernels.jnp_lookup import StackedJnpPlex
+            hps = (self._host_planes_fn()
+                   if self._host_planes_fn is not None else None)
             self._stacked = StackedJnpPlex.from_plexes(
                 [s.plex for s in self.shards], self.offsets, block=block,
-                probe=probe, cache_slots=cache_slots)
+                probe=probe, cache_slots=cache_slots, host_planes=hps)
             self._stacked_cfg = cfg
             self._stacked_built = True
         return self._stacked
@@ -270,3 +278,18 @@ class Snapshot:
         a side-effect-free peek (no device plane construction) for callers
         that only need to poke an existing instance (cache reset)."""
         return self._stacked if self._stacked_built else None
+
+    # -- durability (persist subsystem) --------------------------------------
+    def save(self, gen_dir, *, fsync: bool = True):
+        """Serialise this snapshot into ``gen_dir`` (one generation of the
+        on-disk format; see ``persist.format``). Standalone use only — a
+        durable ``PlexService`` manages generations + manifest itself."""
+        from ..persist.format import save_snapshot
+        return save_snapshot(gen_dir, self, fsync=fsync)
+
+    @classmethod
+    def load(cls, gen_dir, *, verify: bool = False) -> "Snapshot":
+        """Memmap one persisted generation back into an immutable snapshot
+        (no index rebuild; see ``persist.format.load_snapshot``)."""
+        from ..persist.format import load_snapshot
+        return load_snapshot(gen_dir, verify=verify)

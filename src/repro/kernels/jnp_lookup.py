@@ -293,16 +293,18 @@ class StackedJnpPlex:
     @classmethod
     def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
                     block: int = DEFAULT_BLOCK, probe: str | None = None,
-                    cache_slots: int = 0) -> "StackedJnpPlex | None":
+                    cache_slots: int = 0,
+                    host_planes=None) -> "StackedJnpPlex | None":
         """Build the fused stacked path, or ``None`` when the shards' static
         parameters cannot be unified (the caller falls back to per-shard
-        dispatch)."""
+        dispatch). ``host_planes`` feeds a persisted snapshot's precomputed
+        per-shard planes straight through (warm start, no re-derivation)."""
         probe = probe or default_probe_mode()
         if probe not in PROBE_MODES:
             raise ValueError(f"unknown probe mode {probe!r}")
         if cache_slots and cache_slots & (cache_slots - 1):
             raise ValueError("cache_slots must be a power of two")
-        sp = build_stacked_planes(plexes, row_off)
+        sp = build_stacked_planes(plexes, row_off, host_planes=host_planes)
         if sp is None:
             return None
         st = cls(planes=sp, block=block, probe=probe,

@@ -115,8 +115,23 @@ class _HostPlanes:
     window: int
 
 
-def _host_planes(px: PLEX) -> _HostPlanes:
-    """Host PLEX -> host plane arrays + static search parameters.
+@dataclasses.dataclass
+class _HostStatics:
+    """The scalar half of ``_HostPlanes``: everything derivable without
+    touching the bulk key array. The snapshot serialiser
+    (``persist.format``) persists exactly this, so ``save`` never does
+    O(n_keys) throwaway work and ``open`` never re-derives it."""
+    kind: str
+    layer_np: dict[str, np.ndarray]
+    static: dict[str, Any]
+    eps_eff: int
+    window: int
+    n_data: int
+    n_real: int
+
+
+def _host_statics(px: PLEX) -> _HostStatics:
+    """Static search parameters of one PLEX (no plane construction).
 
     Float32 interpolation cannot reproduce the host's float64 predictions
     bit-for-bit, so the eps window is widened by a statically-computed
@@ -124,8 +139,6 @@ def _host_planes(px: PLEX) -> _HostPlanes:
     f32 rounding of ``y0 + t*(y1-y0)``); correctness remains *by
     construction*, not by accident.
     """
-    skh, skl = split_u64(px.spline.keys)
-    spos = px.spline.positions.astype(np.float32)
     if px.spline.positions.size and px.spline.positions[-1] >= (1 << 24):
         raise ValueError("float32 rank plane supports < 2^24 positions; "
                          "shard the index first (serving does)")
@@ -134,11 +147,8 @@ def _host_planes(px: PLEX) -> _HostPlanes:
     slack = int(np.ceil(max_span * 2.0 ** -22)) + 2
     eps_eff = px.eps + slack
     window = round_up(2 * eps_eff + 2, 128)
-
     n_real = px.keys.size
     n_pad = max(round_up(n_real, 128), window)
-    pad = np.full(n_pad - n_real, _U64_MAX, dtype=np.uint64)
-    dh, dl = split_u64(np.concatenate([px.keys, pad]))
 
     if isinstance(px.layer, RadixTable):
         kind = "radix"
@@ -160,10 +170,23 @@ def _host_planes(px: PLEX) -> _HostPlanes:
                       delta=int(px.layer.delta),
                       mode="count" if px.layer.delta + 1 <= COUNT_MODE_MAX
                       else "bisect")
+    return _HostStatics(kind=kind, layer_np=layer_np, static=static,
+                        eps_eff=eps_eff, window=window, n_data=n_pad,
+                        n_real=n_real)
+
+
+def _host_planes(px: PLEX) -> _HostPlanes:
+    """Host PLEX -> host plane arrays + static search parameters (see
+    ``_host_statics`` for the window/slack derivation)."""
+    hs = _host_statics(px)            # includes the f32 rank-plane guard
+    skh, skl = split_u64(px.spline.keys)
+    spos = px.spline.positions.astype(np.float32)
+    pad = np.full(hs.n_data - hs.n_real, _U64_MAX, dtype=np.uint64)
+    dh, dl = split_u64(np.concatenate([px.keys, pad]))
     return _HostPlanes(skh=skh, skl=skl, spos=spos, dh=dh, dl=dl,
-                       n_data=n_pad, n_real=n_real, kind=kind,
-                       layer_np=layer_np, static=static, eps_eff=eps_eff,
-                       window=window)
+                       n_data=hs.n_data, n_real=hs.n_real, kind=hs.kind,
+                       layer_np=hs.layer_np, static=hs.static,
+                       eps_eff=hs.eps_eff, window=hs.window)
 
 
 def build_planes(px: PLEX) -> PlexPlanes:
@@ -257,8 +280,9 @@ class StackedPlanes:
     window: int               # max over shards
 
 
-def build_stacked_planes(plexes: Sequence[PLEX],
-                         row_off: np.ndarray) -> StackedPlanes | None:
+def build_stacked_planes(plexes: Sequence[PLEX], row_off: np.ndarray,
+                         host_planes: Sequence[_HostPlanes] | None = None
+                         ) -> StackedPlanes | None:
     """Fuse shard-local PLEX indexes into one ``StackedPlanes``.
 
     ``row_off[s]`` is shard ``s``'s global key offset (the serving layer's
@@ -266,8 +290,14 @@ def build_stacked_planes(plexes: Sequence[PLEX],
     unified under one jit'd pipeline: mixed layer kinds, CHT shards with
     different radix widths, or a global key count past int32 range (the
     on-device global index plane is int32).
+
+    ``host_planes`` short-circuits the per-shard host derivation: a
+    memmapped snapshot (``persist.format``) supplies ``_HostPlanes`` built
+    from the mapped arrays + persisted statics, so a warm start never
+    recomputes slack/window/layer parameters.
     """
-    hps = [_host_planes(px) for px in plexes]
+    hps = (list(host_planes) if host_planes is not None
+           else [_host_planes(px) for px in plexes])
     kinds = {hp.kind for hp in hps}
     if len(kinds) != 1:
         return None

@@ -1,0 +1,35 @@
+"""Durability layer: versioned snapshots + delta WAL + generation manifest.
+
+The serving stack's state is (immutable ``Snapshot``, mutable delta). This
+package persists both so a process restart costs *load* time, not *build*
+time (the paper counts bulk-load cost as a first-class axis; persisting a
+built index and replaying a small log amortises it across process
+lifetimes):
+
+* ``format``   — the on-disk snapshot: raw little-endian planes behind a
+  checksummed header, memmap-friendly, zero host-side re-derivation of the
+  stacked device layout's static parameters on ``open``.
+* ``wal``      — the append-only, checksummed delta write-ahead log that
+  ``PlexService.insert()/delete()`` append to before mutating the buffer.
+* ``manifest`` — the atomic (write-temp + fsync + rename) generation
+  pointer binding (snapshot generation, WAL segment, schema version); the
+  single commit point, so a crash anywhere mid-merge leaves the previous
+  generation live.
+
+Recovery contract: ``PlexService.open(dir)`` follows the manifest to the
+last committed generation, replays the longest valid WAL prefix, and logs
+(then ignores) everything else — uncommitted generation directories, stray
+WAL segments, and torn WAL tails.
+"""
+from .format import (SNAPSHOT_FILE, CorruptSnapshotError, load_snapshot,
+                     save_snapshot, validate_snapshot)
+from .manifest import (MANIFEST_NAME, CorruptManifestError, Manifest,
+                       gen_name, read_manifest, wal_name, write_manifest)
+from .wal import OP_DELETE, OP_INSERT, WriteAheadLog
+
+__all__ = [
+    "CorruptManifestError", "CorruptSnapshotError", "MANIFEST_NAME",
+    "Manifest", "OP_DELETE", "OP_INSERT", "SNAPSHOT_FILE", "WriteAheadLog",
+    "gen_name", "load_snapshot", "read_manifest", "save_snapshot",
+    "validate_snapshot", "wal_name", "write_manifest",
+]

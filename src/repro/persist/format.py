@@ -1,0 +1,319 @@
+"""Versioned on-disk snapshot format (the durable half of ``core.Snapshot``).
+
+One generation = one ``snapshot.plex`` file:
+
+    [8B magic "PLEXSNP1"]
+    [<QII  header_len, schema_version, header_crc32]
+    [header JSON]
+    [zero pad to 64B]          <- payload base
+    [raw little-endian planes, each 64B-aligned]
+
+The header JSON carries everything that is *not* a bulk array: eps, epoch,
+the original build time, per-shard layer scalars (radix ``r``/``shift``/
+``min_key``, CHT ``r``/``delta``/``max_depth``/``n_nodes``), the tuner's
+decision, and — the part that makes warm starts cheap — the precomputed
+host-plane statics (``eps_eff``, ``window``, padded data length, unified
+static kernel parameters) that ``kernels.planes._host_planes`` normally
+derives from the arrays at plane-build time. The plane directory maps each
+array (global key array, shard offsets, per-shard spline keys/positions,
+per-shard radix table or CHT cells) to (dtype, shape, payload-relative
+offset, nbytes, crc32).
+
+``load_snapshot`` therefore does no index work at all: every plane is
+``np.memmap``'d read-only straight out of the file (read-only maps satisfy
+the Snapshot freeze contract for free), the per-shard ``PLEX`` objects are
+reassembled around the mapped arrays, and the stacked device layout is
+built from the mapped planes plus the persisted statics — no spline scan,
+no auto-tune, no slack/window re-derivation. The only O(n_keys) host work
+on the warm path is the uint64 -> (hi, lo) plane split the device upload
+performs anyway.
+
+Integrity: the header CRC is always verified on open (a torn header is a
+``CorruptSnapshotError``), and every plane's extent is bounds-checked
+against the file size, so a truncated half-written file is rejected
+cheaply. Per-plane CRCs are verified only by ``validate_snapshot`` (or
+``load_snapshot(verify=True)``) because checking them forces a full read —
+the opposite of a lazy memmap open. Crash safety does not rest on this
+file alone: the generation only becomes live when the manifest names it
+(``manifest.write_manifest`` is the atomic commit point).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import struct
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from ..core.autotune import TuneResult
+from ..core.cht import CHT
+from ..core.index import LearnedIndex, Snapshot
+from ..core.plex import PLEX, BuildStats
+from ..core.radix_table import RadixTable
+from ..core.spline import Spline
+from ..kernels.pairs import split_u64
+from ..kernels.planes import _HostPlanes, _host_statics
+from .manifest import fsync_dir
+
+MAGIC = b"PLEXSNP1"
+SCHEMA_VERSION = 1
+SNAPSHOT_FILE = "snapshot.plex"
+
+_FIXED = struct.Struct("<QII")        # header_len, schema_version, header_crc
+_ALIGN = 64
+_U64_MAX = np.iinfo(np.uint64).max
+_EMPTY_F = np.zeros(0)
+_EMPTY_I = np.zeros(0, dtype=np.int64)
+
+
+class CorruptSnapshotError(Exception):
+    """The snapshot file is unreadable: bad magic/schema, torn header, a
+    plane past EOF, or (under verification) a plane CRC mismatch."""
+
+
+def _align(n: int) -> int:
+    return (n + _ALIGN - 1) // _ALIGN * _ALIGN
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr))
+
+
+def _shard_meta(px: PLEX) -> dict:
+    hs = _host_statics(px)            # scalars only, no plane construction
+    if isinstance(px.layer, RadixTable):
+        layer = dict(r=int(px.layer.r), min_key=int(px.layer.min_key),
+                     shift=int(px.layer.shift), n_keys=int(px.layer.n_keys))
+    else:
+        layer = dict(r=int(px.layer.r), delta=int(px.layer.delta),
+                     n_nodes=int(px.layer.n_nodes),
+                     max_depth=int(px.layer.max_depth),
+                     n_keys=int(px.layer.n_keys))
+    return {
+        "kind": hs.kind,
+        "layer": layer,
+        "tuning": {"kind": px.tuning.kind, "r": int(px.tuning.r),
+                   "delta": None if px.tuning.delta is None
+                   else int(px.tuning.delta)},
+        "spline_eps": int(px.spline.eps),
+        # persisted host-plane statics: open() never re-derives these
+        "eps_eff": int(hs.eps_eff), "window": int(hs.window),
+        "n_data": int(hs.n_data), "n_real": int(hs.n_real),
+        "static": {k: v for k, v in hs.static.items()},
+    }
+
+
+def save_snapshot(gen_dir: str | pathlib.Path, snap: Snapshot, *,
+                  fsync: bool = True) -> pathlib.Path:
+    """Serialise ``snap`` into ``gen_dir/snapshot.plex`` (write-temp +
+    rename; the *manifest* rename is the durability commit point, this
+    rename just keeps partially-written files out of the directory's
+    steady-state namespace)."""
+    gen_dir = pathlib.Path(gen_dir)
+    gen_dir.mkdir(parents=True, exist_ok=True)
+    path = gen_dir / SNAPSHOT_FILE
+
+    planes: list[tuple[str, np.ndarray]] = [
+        ("keys", np.ascontiguousarray(snap.keys, dtype=np.uint64)),
+        ("offsets", np.ascontiguousarray(snap.offsets, dtype=np.int64)),
+    ]
+    shards_meta = []
+    for i, shard in enumerate(snap.shards):
+        px = shard.plex
+        shards_meta.append(_shard_meta(px))
+        planes.append((f"s{i}.spline_keys",
+                       np.ascontiguousarray(px.spline.keys, np.uint64)))
+        planes.append((f"s{i}.spline_pos",
+                       np.ascontiguousarray(px.spline.positions, np.int64)))
+        larr = (px.layer.table if isinstance(px.layer, RadixTable)
+                else px.layer.cells)
+        planes.append((f"s{i}.layer", np.ascontiguousarray(larr, np.uint32)))
+
+    directory = []
+    rel = 0
+    for name, arr in planes:
+        directory.append({"name": name, "dtype": arr.dtype.str,
+                          "shape": list(arr.shape), "offset": rel,
+                          "nbytes": int(arr.nbytes), "crc32": _crc(arr)})
+        rel = _align(rel + arr.nbytes)
+
+    header = {
+        "schema": SCHEMA_VERSION,
+        "eps": int(snap.eps),
+        "epoch": int(snap.epoch),
+        "build_s": float(snap.build_s),
+        "n_keys": int(snap.n_keys),
+        "n_shards": int(snap.n_shards),
+        "shards": shards_meta,
+        "planes": directory,
+    }
+    hjson = json.dumps(header, separators=(",", ":")).encode()
+    payload_base = _align(len(MAGIC) + _FIXED.size + len(hjson))
+
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(MAGIC)
+        f.write(_FIXED.pack(len(hjson), SCHEMA_VERSION, zlib.crc32(hjson)))
+        f.write(hjson)
+        f.write(b"\0" * (payload_base - f.tell()))
+        for entry, (_, arr) in zip(directory, planes):
+            f.write(b"\0" * (payload_base + entry["offset"] - f.tell()))
+            f.write(np.ascontiguousarray(arr).tobytes())
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if fsync:
+        fsync_dir(gen_dir)
+    return path
+
+
+def _read_header(path: pathlib.Path) -> tuple[dict, int]:
+    """-> (header dict, payload base offset); raises CorruptSnapshotError."""
+    try:
+        with open(path, "rb") as f:
+            magic = f.read(len(MAGIC))
+            if magic != MAGIC:
+                raise CorruptSnapshotError(f"{path}: bad magic {magic!r}")
+            fixed = f.read(_FIXED.size)
+            if len(fixed) < _FIXED.size:
+                raise CorruptSnapshotError(f"{path}: truncated fixed header")
+            hlen, schema, hcrc = _FIXED.unpack(fixed)
+            if schema != SCHEMA_VERSION:
+                raise CorruptSnapshotError(
+                    f"{path}: schema {schema} != {SCHEMA_VERSION}")
+            hjson = f.read(hlen)
+    except OSError as e:
+        raise CorruptSnapshotError(f"{path}: unreadable ({e})") from e
+    if len(hjson) < hlen or zlib.crc32(hjson) != hcrc:
+        raise CorruptSnapshotError(f"{path}: header checksum mismatch")
+    return json.loads(hjson), _align(len(MAGIC) + _FIXED.size + hlen)
+
+
+def _map_planes(path: pathlib.Path, header: dict,
+                payload_base: int) -> dict[str, np.ndarray]:
+    size = path.stat().st_size
+    mm: dict[str, np.ndarray] = {}
+    for e in header["planes"]:
+        off = payload_base + e["offset"]
+        if off + e["nbytes"] > size:
+            raise CorruptSnapshotError(
+                f"{path}: plane {e['name']} extends past EOF "
+                f"({off + e['nbytes']} > {size})")
+        mm[e["name"]] = np.memmap(path, dtype=np.dtype(e["dtype"]),
+                                  mode="r", offset=off,
+                                  shape=tuple(e["shape"]))
+    return mm
+
+
+def validate_snapshot(gen_dir: str | pathlib.Path) -> bool:
+    """Full-read integrity check: header CRC + every plane CRC. Raises
+    ``CorruptSnapshotError`` on the first mismatch, returns True when the
+    whole file verifies."""
+    path = pathlib.Path(gen_dir) / SNAPSHOT_FILE
+    header, payload_base = _read_header(path)
+    mm = _map_planes(path, header, payload_base)
+    for e in header["planes"]:
+        if _crc(mm[e["name"]]) != e["crc32"]:
+            raise CorruptSnapshotError(
+                f"{path}: plane {e['name']} checksum mismatch")
+    return True
+
+
+def _stub_tuning(meta: dict) -> TuneResult:
+    """A reopened index keeps the tuner's *decision*, not its model grids
+    (those exist for build-time inspection only)."""
+    t = meta["tuning"]
+    return TuneResult(kind=t["kind"], r=int(t["r"]),
+                      delta=None if t["delta"] is None else int(t["delta"]),
+                      predicted_lambda=0.0, predicted_bytes=0,
+                      budget_bytes=0, radix_lambda=_EMPTY_F,
+                      radix_bytes=_EMPTY_I, cht_lambda=_EMPTY_F,
+                      cht_bytes=_EMPTY_I, cht_nodes=_EMPTY_I)
+
+
+def _build_layer(meta: dict, cells: np.ndarray):
+    lm = meta["layer"]
+    if meta["kind"] == "radix":
+        return RadixTable(r=int(lm["r"]), min_key=np.uint64(lm["min_key"]),
+                          shift=int(lm["shift"]), table=cells,
+                          n_keys=int(lm["n_keys"]))
+    return CHT(r=int(lm["r"]), delta=int(lm["delta"]), cells=cells,
+               n_nodes=int(lm["n_nodes"]), max_depth=int(lm["max_depth"]),
+               n_keys=int(lm["n_keys"]))
+
+
+def _host_planes_from_mapped(header: dict, mm: dict[str, np.ndarray],
+                             bounds: Sequence[tuple[int, int]]
+                             ) -> list[_HostPlanes]:
+    """Reassemble the stacked builder's per-shard ``_HostPlanes`` from the
+    mapped planes + persisted statics — the zero-re-derivation warm path.
+    The u64 -> u32 plane split is the one O(n) op left; the device upload
+    would copy those bytes regardless."""
+    keys = mm["keys"]
+    hps = []
+    for i, sm in enumerate(header["shards"]):
+        skh, skl = split_u64(np.asarray(mm[f"s{i}.spline_keys"]))
+        spos = np.asarray(mm[f"s{i}.spline_pos"]).astype(np.float32)
+        lo, hi = bounds[i]
+        padded = np.full(sm["n_data"], _U64_MAX, dtype=np.uint64)
+        padded[:sm["n_real"]] = keys[lo:hi]
+        dh, dl = split_u64(padded)
+        name = "table" if sm["kind"] == "radix" else "cells"
+        hps.append(_HostPlanes(
+            skh=skh, skl=skl, spos=spos, dh=dh, dl=dl,
+            n_data=int(sm["n_data"]), n_real=int(sm["n_real"]),
+            kind=sm["kind"], layer_np={name: mm[f"s{i}.layer"]},
+            static=dict(sm["static"]), eps_eff=int(sm["eps_eff"]),
+            window=int(sm["window"])))
+    return hps
+
+
+def load_snapshot(gen_dir: str | pathlib.Path, *,
+                  verify: bool = False) -> Snapshot:
+    """Memmap one committed generation back into an immutable ``Snapshot``.
+
+    No index construction happens: shards wrap the mapped arrays directly,
+    and the stacked device layout (built lazily at the first jnp lookup)
+    consumes the mapped planes plus the persisted statics via the
+    snapshot's ``host_planes_fn`` hook.
+    """
+    gen_dir = pathlib.Path(gen_dir)
+    path = gen_dir / SNAPSHOT_FILE
+    header, payload_base = _read_header(path)
+    mm = _map_planes(path, header, payload_base)
+    if verify:
+        for e in header["planes"]:
+            if _crc(mm[e["name"]]) != e["crc32"]:
+                raise CorruptSnapshotError(
+                    f"{path}: plane {e['name']} checksum mismatch")
+
+    keys = mm["keys"]
+    offsets = np.asarray(mm["offsets"], dtype=np.int64)
+    if keys.size != header["n_keys"] or offsets.size != header["n_shards"]:
+        raise CorruptSnapshotError(f"{path}: header/plane shape mismatch")
+    eps = int(header["eps"])
+    bounds = [(int(offsets[i]),
+               int(offsets[i + 1]) if i + 1 < offsets.size else keys.size)
+              for i in range(offsets.size)]
+
+    shards = []
+    for i, sm in enumerate(header["shards"]):
+        spline = Spline(keys=mm[f"s{i}.spline_keys"],
+                        positions=mm[f"s{i}.spline_pos"],
+                        eps=int(sm["spline_eps"]), n_keys=int(sm["n_real"]))
+        layer = _build_layer(sm, mm[f"s{i}.layer"])
+        lo, hi = bounds[i]
+        px = PLEX(spline=spline, layer=layer, tuning=_stub_tuning(sm),
+                  keys=keys[lo:hi], eps=eps,
+                  stats=BuildStats(0.0, 0.0, 0.0, 0.0))
+        shards.append(LearnedIndex(plex=px))
+
+    fn: Callable[[], list[_HostPlanes]] = (
+        lambda: _host_planes_from_mapped(header, mm, bounds))
+    return Snapshot(keys, eps, offsets, shards,
+                    build_s=float(header["build_s"]),
+                    epoch=int(header["epoch"]), host_planes_fn=fn)

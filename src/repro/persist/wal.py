@@ -1,0 +1,138 @@
+"""Append-only, checksummed delta write-ahead log.
+
+One WAL segment belongs to one snapshot generation (the manifest binds
+them). ``PlexService.insert()/delete()`` append a record *before* mutating
+the in-memory ``DeltaBuffer``, so the durable state is always >= the served
+state; replaying the segment over its snapshot reconstructs the exact
+``_DeltaState`` (tombstone multiplicities are recomputed against the same
+immutable snapshot, so they cannot drift).
+
+File layout:
+
+    [8B magic "PLEXWAL1"] [record]*
+    record = <III-ish: u32 crc32 | u32 payload_nbytes | u8 opcode>
+             [payload: raw little-endian uint64 keys]
+
+The CRC covers the opcode byte + payload, so a torn header, a torn
+payload, and a bit-flipped record are all detected. Recovery is
+prefix-valid: ``replay`` returns every record up to the first invalid one
+and reports how many trailing bytes were discarded; the caller (service
+``open``) logs the discard and truncates the file back to the valid prefix
+before appending again, so garbage can never be buried under new records.
+
+Durability: every append flushes, and fsyncs when the log was opened with
+``fsync=True`` (the default for durable services; tests and benchmarks may
+trade the fsync for speed — the prefix-recovery contract is unchanged).
+"""
+from __future__ import annotations
+
+import logging
+import os
+import pathlib
+import struct
+import zlib
+
+import numpy as np
+
+log = logging.getLogger("repro.persist")
+
+MAGIC = b"PLEXWAL1"
+OP_INSERT = 1
+OP_DELETE = 2
+_OPS = (OP_INSERT, OP_DELETE)
+_REC = struct.Struct("<IIB")       # crc32, payload nbytes, opcode
+
+
+class WriteAheadLog:
+    """Append handle over one WAL segment (single-writer, like the delta
+    buffer it guards — the service serialises appends under its lock)."""
+
+    def __init__(self, path: pathlib.Path, fh, *, fsync: bool = True):
+        self.path = path
+        self._fh = fh
+        self.fsync = bool(fsync)
+
+    @classmethod
+    def create(cls, path: str | pathlib.Path, *,
+               fsync: bool = True) -> "WriteAheadLog":
+        """Start a fresh (empty) segment, truncating any existing file."""
+        path = pathlib.Path(path)
+        fh = open(path, "wb")
+        fh.write(MAGIC)
+        fh.flush()
+        if fsync:
+            os.fsync(fh.fileno())
+        return cls(path, fh, fsync=fsync)
+
+    @classmethod
+    def open(cls, path: str | pathlib.Path, *, fsync: bool = True,
+             truncate_at: int | None = None) -> "WriteAheadLog":
+        """Open an existing segment for appending. ``truncate_at`` (from
+        ``replay``'s valid-prefix length) drops a torn tail first, so new
+        records are never appended after garbage."""
+        path = pathlib.Path(path)
+        fh = open(path, "r+b")
+        if truncate_at is not None and truncate_at < path.stat().st_size:
+            fh.truncate(max(truncate_at, len(MAGIC)))
+            fh.flush()
+            if fsync:
+                os.fsync(fh.fileno())
+        fh.seek(0, os.SEEK_END)
+        return cls(path, fh, fsync=fsync)
+
+    def append(self, op: int, keys: np.ndarray) -> int:
+        """Append one checksummed record; returns the record's byte size.
+        The write is flushed (and fsync'd when enabled) before returning —
+        the caller may only mutate the in-memory delta afterwards."""
+        if op not in _OPS:
+            raise ValueError(f"unknown WAL opcode {op}")
+        payload = np.ascontiguousarray(keys, dtype="<u8").tobytes()
+        rec = _REC.pack(zlib.crc32(bytes([op]) + payload),
+                        len(payload), op) + payload
+        self._fh.write(rec)
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+        return len(rec)
+
+    @property
+    def size_bytes(self) -> int:
+        return self._fh.tell()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    @staticmethod
+    def replay(path: str | pathlib.Path
+               ) -> tuple[list[tuple[int, np.ndarray]], int, int]:
+        """Decode the longest valid record prefix.
+
+        Returns ``(records, valid_bytes, discarded_bytes)`` where
+        ``records`` is ``[(opcode, uint64 key array), ...]`` in append
+        order and ``valid_bytes`` is the truncation point a re-opened
+        segment should use. A missing/too-short/wrong-magic file yields no
+        records with everything discarded (the caller decides whether that
+        is a fresh start or corruption)."""
+        path = pathlib.Path(path)
+        try:
+            data = path.read_bytes()
+        except FileNotFoundError:
+            return [], 0, 0
+        if data[:len(MAGIC)] != MAGIC:
+            return [], 0, len(data)
+        records: list[tuple[int, np.ndarray]] = []
+        pos = len(MAGIC)
+        while pos + _REC.size <= len(data):
+            crc, nbytes, op = _REC.unpack_from(data, pos)
+            end = pos + _REC.size + nbytes
+            if op not in _OPS or nbytes % 8 or end > len(data):
+                break
+            payload = data[pos + _REC.size:end]
+            if zlib.crc32(bytes([op]) + payload) != crc:
+                break
+            records.append((op, np.frombuffer(payload, dtype="<u8")
+                            .astype(np.uint64)))
+            pos = end
+        return records, pos, len(data) - pos

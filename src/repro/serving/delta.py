@@ -209,6 +209,23 @@ class DeltaBuffer:
         self._device = (s, planes)
         return planes
 
+    # -- durability support --------------------------------------------------
+    def pending_ops(self) -> list[tuple[str, np.ndarray]]:
+        """Replayable ``("delete" | "insert", keys)`` records equivalent to
+        this buffer's state. Deletes come first: replaying the tombstones
+        against the same (immutable) snapshot recreates the exact
+        multiplicities, and the inserts that follow are live again — the
+        insert-after-delete semantics round-trip by construction. Used by
+        ``PlexService.save`` to seed a fresh WAL segment with the live
+        (unmerged) delta."""
+        s = self._state
+        ops: list[tuple[str, np.ndarray]] = []
+        if s.del_keys.size:
+            ops.append(("delete", s.del_keys.copy()))
+        if s.ins.size:
+            ops.append(("insert", s.ins.copy()))
+        return ops
+
     # -- merge support -------------------------------------------------------
     def logical_keys(self) -> np.ndarray:
         """Materialise the logical merged key array (snapshot occurrences

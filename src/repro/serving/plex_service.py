@@ -53,6 +53,20 @@ One serving front-end over the snapshot + delta ownership model:
   epoch, so ``stats.cache_hit_rate`` is the current snapshot's number.
   Results are bit-identical with the cache on or off.
 
+* **Durability (opt-in).** ``save(dir)`` persists the current snapshot as
+  a numbered generation (``persist.format``), seeds a fresh WAL segment
+  with the live delta, and atomically publishes the generation manifest —
+  from then on the service is *durable*: every ``insert()``/``delete()``
+  appends a checksummed WAL record **before** mutating the delta buffer,
+  and ``merge()`` writes the new generation + rotates the WAL (commit =
+  one manifest rename) *before* the in-memory swap, then garbage-collects
+  the old generation. ``PlexService.open(dir)`` restarts from the last
+  committed generation in **load** time, not build time: the snapshot
+  planes are memmapped (no spline scan, no auto-tune, no plane
+  re-derivation) and the WAL's valid prefix is replayed into a fresh
+  delta; torn WAL tails and uncommitted generations from a crash are
+  logged and discarded.
+
 Consistency contract: updates (and merges) first drain the submit queue,
 so every queued lookup observes the state at its dispatch; lookups then see
 delta changes immediately. Mutations are single-writer (serialised under
@@ -70,6 +84,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import logging
+import pathlib
+import shutil
 import threading
 import time
 from typing import Iterable, Sequence
@@ -83,10 +100,18 @@ from ..kernels.jnp_lookup import PROBE_MODES
 from ..kernels.pairs import split_u64
 from ..kernels.planes import finalize_indices
 from ..parallel.sharding import logical_sharding
+from ..persist.format import load_snapshot, save_snapshot
+from ..persist.manifest import (Manifest, gen_name, read_manifest, wal_name,
+                                write_manifest)
+from ..persist.wal import OP_DELETE, OP_INSERT, WriteAheadLog
 from .delta import DELTA_CAP_MIN, DeltaBuffer, next_pow2
 
 __all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD", "LookupTicket",
            "PlexService", "ServiceStats", "SHARD_MAX_KEYS", "service_mesh"]
+
+log = logging.getLogger("repro.persist")
+
+_WAL_OPS = {"insert": OP_INSERT, "delete": OP_DELETE}
 
 # one logical rule: query batches shard over the mesh's data axis
 _SERVICE_RULES = {"act_batch": ("data",)}
@@ -177,21 +202,72 @@ class _ServiceState:
     delta: DeltaBuffer
 
 
+@dataclasses.dataclass
+class _DurableState:
+    """Durable-mode attachment: the directory this service persists to,
+    the committed generation number, and the open WAL append handle for
+    that generation. Swapped as a unit when ``merge()`` rotates
+    generations (mutations hold the service lock, so the pair (in-memory
+    state, durable state) can never mix epochs)."""
+    root: pathlib.Path
+    generation: int
+    wal: WriteAheadLog
+    fsync: bool = True
+
+
 def service_mesh(devices: Sequence | None = None) -> Mesh:
     """1-D ``data`` mesh over the available jax devices."""
     devs = np.asarray(devices if devices is not None else jax.devices())
     return Mesh(devs, ("data",))
 
 
+def _coalesce_ops(records: Sequence[tuple[int, np.ndarray]]
+                  ) -> Iterable[tuple[int, np.ndarray]]:
+    """Merge runs of consecutive same-opcode WAL records into one batched
+    op each. Semantics-preserving: inserts within a run commute, deletes
+    within a run commute (tombstones are idempotent per key value), and
+    the run boundaries keep every insert/delete interleaving intact."""
+    run_op: int | None = None
+    run: list[np.ndarray] = []
+    for op, keys in records:
+        if op != run_op and run:
+            yield run_op, np.concatenate(run)
+            run = []
+        run_op = op
+        run.append(keys)
+    if run:
+        yield run_op, np.concatenate(run)
+
+
+def _gc_generations(root: pathlib.Path, keep: int) -> None:
+    """Remove every generation dir and WAL segment other than ``keep``
+    (called only after the manifest has committed ``keep``, so the
+    removals can never touch recoverable state). Best-effort: a leftover
+    from a failed removal is re-collected on the next rotation."""
+    keep_dir, keep_wal = gen_name(keep), wal_name(keep)
+    for p in root.glob("gen-*"):
+        if p.is_dir() and p.name != keep_dir:
+            log.info("gc(%s): removing generation %s", root, p.name)
+            shutil.rmtree(p, ignore_errors=True)
+    for p in root.glob("wal-*.log"):
+        if p.name != keep_wal:
+            log.info("gc(%s): removing WAL segment %s", root, p.name)
+            try:
+                p.unlink()
+            except OSError:  # pragma: no cover
+                pass
+
+
 class PlexService:
     """Serve (and update) PLEX lookups across shards and backends."""
 
-    def __init__(self, keys: np.ndarray, eps: int = 64, *,
+    def __init__(self, keys: np.ndarray | None, eps: int = 64, *,
                  n_shards: int | None = None, backend: str = "jnp",
                  block: int = DEFAULT_BLOCK, mesh: Mesh | None = None,
                  probe: str | None = None, cache_slots: int = 0,
                  max_delay_s: float = 0.002,
                  merge_threshold: int = DEFAULT_MERGE_THRESHOLD,
+                 _snapshot: Snapshot | None = None,
                  **build_kw):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
@@ -202,12 +278,17 @@ class PlexService:
             raise ValueError(f"unknown probe mode {probe!r}")
         if cache_slots and cache_slots & (cache_slots - 1):
             raise ValueError("cache_slots must be a power of two")
-        keys = np.ascontiguousarray(keys, dtype=np.uint64)
-        if keys.size == 0:
-            raise ValueError("cannot serve an empty key set")
-        if np.any(keys[1:] < keys[:-1]):
-            raise ValueError("keys must be sorted")
-        self.eps = int(eps)
+        if _snapshot is not None:
+            # warm start (PlexService.open): adopt a prebuilt snapshot,
+            # skip the host-side build entirely
+            self.eps = _snapshot.eps
+        else:
+            keys = np.ascontiguousarray(keys, dtype=np.uint64)
+            if keys.size == 0:
+                raise ValueError("cannot serve an empty key set")
+            if np.any(keys[1:] < keys[:-1]):
+                raise ValueError("keys must be sorted")
+            self.eps = int(eps)
         self.default_backend = backend
         self.block = int(block)
         self.mesh = mesh if mesh is not None else service_mesh()
@@ -226,11 +307,15 @@ class PlexService:
         # (manual-merge services, threshold 0, grow geometrically instead)
         self._delta_capacity = max(
             next_pow2(max(self.merge_threshold, 1)), DELTA_CAP_MIN)
-        snap = Snapshot.build(keys, eps, n_shards=n_shards, backend=backend,
-                              block=self.block, devices=self._devices,
-                              **build_kw)
+        snap = _snapshot if _snapshot is not None else Snapshot.build(
+            keys, eps, n_shards=n_shards, backend=backend,
+            block=self.block, devices=self._devices, **build_kw)
         self._state = _ServiceState(
             snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+        # durable-mode attachment (None = in-memory only); load_s is the
+        # wall time PlexService.open spent mapping + replaying
+        self._dur: _DurableState | None = None
+        self.load_s = 0.0
 
         # fixed per-service: micro-batch query planes shard over "data"
         self._batch_sharding = logical_sharding(
@@ -503,6 +588,10 @@ class PlexService:
         with self._lock:
             self.drain()
             state = self._state
+            if self._dur is not None:
+                # WAL-before-mutation: if the append raises, the in-memory
+                # state is untouched and durable >= served still holds
+                self._dur.wal.append(OP_INSERT, keys)
             n = state.delta.insert(keys)
             self.stats.inserts += n
             self._after_update(state)
@@ -518,6 +607,8 @@ class PlexService:
         with self._lock:
             self.drain()
             state = self._state
+            if self._dur is not None:
+                self._dur.wal.append(OP_DELETE, keys)
             n = state.delta.delete(keys)
             self.stats.deletes += n
             self._after_update(state)
@@ -561,14 +652,163 @@ class PlexService:
             # warm time is merge/build work, not serving work
             if state.snapshot.built_stacked() is not None:
                 self._warm_stacked(snap, self._delta_capacity)
+            # durable mode: commit the new generation (snapshot + fresh WAL
+            # + manifest rename) BEFORE the in-memory swap — a crash in
+            # here leaves the previous generation live with its WAL still
+            # holding every buffered update, so recovery replays to exactly
+            # the pre-merge logical state
+            new_dur = None
+            if self._dur is not None:
+                new_dur = self._commit_generation(
+                    self._dur.root, self._dur.generation + 1, snap, (),
+                    self._dur.fsync)
             # the atomic swap: one reference assignment publishes the new
             # (snapshot, delta) pair
             self._state = _ServiceState(
                 snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+            if new_dur is not None:
+                self._swap_durable(new_dur)
             self.stats.merges += 1
             self.stats.merge_s += time.perf_counter() - t0
             self.stats.new_epoch(snap.epoch)
             return True
+
+    # -- durability ----------------------------------------------------------
+    @staticmethod
+    def _commit_generation(root: pathlib.Path, gen: int, snap: Snapshot,
+                           seed_ops, fsync: bool) -> _DurableState:
+        """THE durable commit protocol, in one place: write generation
+        ``gen``'s snapshot, create its fresh WAL seeded with ``seed_ops``
+        (``DeltaBuffer.pending_ops`` order), then publish with one atomic
+        manifest rename. Nothing is live until the rename, so a crash
+        anywhere in here leaves the previous generation (and its WAL)
+        authoritative."""
+        save_snapshot(root / gen_name(gen), snap, fsync=fsync)
+        wal = WriteAheadLog.create(root / wal_name(gen), fsync=fsync)
+        for opname, op_keys in seed_ops:
+            wal.append(_WAL_OPS[opname], op_keys)
+        write_manifest(root, Manifest.for_generation(gen), fsync=fsync)
+        return _DurableState(root=root, generation=gen, wal=wal,
+                             fsync=fsync)
+
+    def _swap_durable(self, new_dur: _DurableState) -> None:
+        """Adopt a freshly committed generation (lock held): close the
+        previous WAL handle and collect superseded on-disk state."""
+        old = self._dur
+        self._dur = new_dur
+        if old is not None:
+            old.wal.close()
+        _gc_generations(new_dur.root, new_dur.generation)
+
+    def save(self, root, *, fsync: bool = True) -> pathlib.Path:
+        """Persist the current (snapshot, delta) state under ``root`` and
+        attach this service to it (durable mode).
+
+        Writes the snapshot as a new numbered generation, seeds that
+        generation's WAL with the live delta (deletes before inserts — the
+        replay-equivalent order), and atomically publishes the manifest.
+        From here on every ``insert``/``delete`` is WAL-logged before it is
+        applied and every ``merge`` rotates the generation; older
+        generations are garbage-collected. Safe to call repeatedly (each
+        call commits a fresh generation)."""
+        root = pathlib.Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            self.drain()
+            state = self._state
+            man = read_manifest(root)
+            gen = man.generation + 1 if man is not None else 0
+            self._swap_durable(self._commit_generation(
+                root, gen, state.snapshot, state.delta.pending_ops(),
+                fsync))
+        return root
+
+    @classmethod
+    def open(cls, root, *, backend: str = "jnp", durable: bool = True,
+             fsync: bool = True, verify: bool = False,
+             **kw) -> "PlexService":
+        """Warm-start a service from a persisted directory in load time.
+
+        Follows the manifest to the last committed generation, memmaps its
+        snapshot (no rebuild of any kind), and replays the WAL's valid
+        prefix into a fresh delta buffer — crash leftovers (uncommitted
+        generation dirs, stray WAL segments, torn WAL tails) are logged
+        and discarded, and a torn tail is truncated away before the
+        segment is reused. ``durable=True`` (default) keeps the service
+        attached: subsequent updates append to the recovered WAL and
+        merges rotate generations. ``load_s`` records the total open wall
+        time (map + replay)."""
+        t0 = time.perf_counter()
+        root = pathlib.Path(root)
+        man = read_manifest(root)
+        if man is None:
+            raise FileNotFoundError(f"no committed manifest under {root}")
+        for p in sorted(root.glob("gen-*")):
+            if p.is_dir() and p.name != man.snapshot:
+                log.warning("open(%s): discarding uncommitted generation %s",
+                            root, p.name)
+        for p in sorted(root.glob("wal-*.log")):
+            if p.name != man.wal:
+                log.warning("open(%s): discarding stray WAL segment %s",
+                            root, p.name)
+        snap = load_snapshot(root / man.snapshot, verify=verify)
+        svc = cls(None, backend=backend, _snapshot=snap, **kw)
+        wal_path = root / man.wal
+        records, valid, discarded = WriteAheadLog.replay(wal_path)
+        if discarded:
+            log.warning("open(%s): WAL %s: discarded %d trailing byte(s) "
+                        "past the last valid record", root, man.wal,
+                        discarded)
+        # replay, coalescing consecutive same-op records first: only the
+        # insert/delete *interleaving* is order-sensitive, and each delta
+        # mutation rebuilds the whole published state, so applying one
+        # batched op per run keeps recovery linear in WAL size instead of
+        # quadratic in record count
+        delta = svc._state.delta
+        for op, op_keys in _coalesce_ops(records):
+            if op == OP_INSERT:
+                delta.insert(op_keys)
+            else:
+                delta.delete(op_keys)
+        if durable:
+            if wal_path.exists() and valid > 0:
+                # valid > 0 implies the segment's magic verified; truncate
+                # the torn tail (if any) and append after the good prefix
+                wal = WriteAheadLog.open(wal_path, fsync=fsync,
+                                         truncate_at=valid)
+            else:
+                # missing segment or corrupt magic: appending after a bad
+                # header would make every new record unrecoverable, so
+                # start a fresh segment instead
+                log.warning("open(%s): WAL %s %s; starting a fresh segment",
+                            root, man.wal,
+                            "has an invalid header" if wal_path.exists()
+                            else "is missing")
+                wal = WriteAheadLog.create(wal_path, fsync=fsync)
+            svc._dur = _DurableState(root=root, generation=man.generation,
+                                     wal=wal, fsync=fsync)
+        svc.load_s = time.perf_counter() - t0
+        return svc
+
+    @property
+    def durable(self) -> bool:
+        """True when attached to a persisted directory (updates WAL-logged,
+        merges rotate generations)."""
+        return self._dur is not None
+
+    @property
+    def generation(self) -> int:
+        """Committed durable generation (-1 for in-memory services)."""
+        return self._dur.generation if self._dur is not None else -1
+
+    def close(self) -> None:
+        """Drain outstanding work and release the WAL handle (the durable
+        directory stays openable; an in-memory service just drains)."""
+        with self._lock:
+            self.drain()
+            if self._dur is not None:
+                self._dur.wal.close()
+                self._dur = None
 
     # -- continuous-stream queue --------------------------------------------
     def submit(self, q: np.ndarray) -> LookupTicket:

@@ -127,15 +127,21 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
         k[np.random.default_rng(seed).integers(0, k.size, 1_024)])
     monkeypatch.setattr(sb, "EPS_SWEEP", (16,))
     monkeypatch.setattr(sb, "OUT_PATH", tmp_path / "BENCH_lookup.json")
+    # cold_vs_warm regenerates its keys by dataset name at COLD_WARM_N;
+    # pin both to the tiny synthetic set and keep the snapshots in tmp
+    monkeypatch.setattr(sb, "generate", lambda name, n, seed=0: keys)
+    monkeypatch.setattr(sb, "COLD_WARM_N", keys.size)
+    monkeypatch.setattr(sb, "SNAP_DIR", tmp_path / "bench-snapshots")
     rows = sb.run()
     assert any(r.startswith("serve,tiny,") for r in rows)
     records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
-    # one uniform record per backend + one zipf + one update_mix (jnp path)
-    assert len(records) == len(BACKENDS) + 2
+    # one uniform record per backend + zipf + update_mix + cold_vs_warm
+    assert len(records) == len(BACKENDS) + 3
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
     extra = {"zipf": {"cache_hit_rate"},
-             "update_mix": {"write_frac", "merges"}}
+             "update_mix": {"write_frac", "merges"},
+             "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"}}
     for rec in records:
         assert set(rec) == base | extra.get(rec["workload"], set())
         assert rec["ns_per_lookup"] > 0
@@ -147,3 +153,9 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert um[0]["merges"] >= 0
     # merges are build work: the build_s column carries the rebuild time
     assert um[0]["build_s"] > 0
+    cw = [r for r in records if r["workload"] == "cold_vs_warm"]
+    assert len(cw) == 1
+    assert cw[0]["load_s"] > 0 and cw[0]["first_batch_s"] > 0
+    assert cw[0]["warm_speedup"] > 0
+    # the persisted copy is reusable: a second run warm-starts from it
+    assert (tmp_path / "bench-snapshots").is_dir()
