@@ -17,20 +17,26 @@ time plus the first-batch latency after ``open()``. The persisted
 directories live under ``BENCH_SNAPSHOT_DIR`` (default
 ``bench-snapshots/``) and are *reused* when a valid one is already there —
 CI caches them across runs so the bench_diff baseline warm-starts instead
-of rebuilding from raw keys. Results are verified against np.searchsorted
-before (or, for the update mix, after) timing, appended to the CSV row
-stream, and written to ``BENCH_lookup.json`` with a schema-stable record
-layout so future PRs can diff the perf trajectory
-(``benchmarks.bench_diff``):
+of rebuilding from raw keys. A ``mesh_scale`` workload measures the
+distribution subsystem: the same 8-shard snapshot served through placement
+plans spanning 1/2/4/8 mesh devices (the multi-device CI leg forces 8
+host CPU devices via ``XLA_FLAGS``; plan widths past the available device
+count are skipped, so a 1-device host records the 1-device point only).
+Results are verified against np.searchsorted before (or, for the update
+mix, after) timing, appended to the CSV row stream, and written to
+``BENCH_lookup.json`` with a schema-stable record layout so future PRs
+can diff the perf trajectory (``benchmarks.bench_diff``):
 
     {"dataset": str, "n": int, "eps": int, "backend": str,
-     "workload": "uniform" | "zipf" | "update_mix" | "cold_vs_warm",
+     "workload": "uniform" | "zipf" | "update_mix" | "cold_vs_warm"
+                 | "mesh_scale",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
 
 Zipf records additionally carry ``cache_hit_rate``; update_mix records
 carry ``write_frac`` and ``merges``; cold_vs_warm records carry
-``load_s``, ``first_batch_s``, and ``warm_speedup`` (all
-schema-additive).
+``load_s``, ``first_batch_s``, and ``warm_speedup``; mesh_scale records
+carry ``n_devices`` (all schema-additive, and ``n_devices`` is part of
+the ``bench_diff`` match key so differently-spanned runs never collide).
 
 Pallas interpret mode is a correctness harness, not a timing target, so it
 is measured over a smaller query slice; the recorded number tracks
@@ -59,6 +65,8 @@ ZIPF_EPS = 64
 ZIPF_CACHE_SLOTS = 1 << 15
 UPDATE_MIX_WRITE_FRAC = 0.1       # writes / (reads + writes)
 UPDATE_MIX_ROUNDS = 8
+MESH_SCALE_DEVS = (1, 2, 4, 8)    # plan widths (skipped past available)
+MESH_SCALE_SHARDS = 8             # fixed sharding so only the span varies
 # durability workload: a fixed 1M-key index regardless of BENCH_N (the
 # acceptance bar for warm starts is stated at this scale)
 COLD_WARM_N = int(os.environ.get("BENCH_COLDWARM_N", 1_000_000))
@@ -155,6 +163,44 @@ def _run_update_mix(keys: np.ndarray, n_reads: int,
     }
 
 
+def _run_mesh_scale(keys: np.ndarray, q: np.ndarray,
+                    eps: int = ZIPF_EPS) -> list[dict]:
+    """Routed mesh throughput at widening placement spans.
+
+    One 8-shard snapshot, plans spanning 1/2/4/8 of the available jax
+    devices (the multi-device CI leg forces 8 host CPU devices; spans past
+    the available count are skipped). Every span is verified against
+    searchsorted before timing — the mesh path must stay exact, not just
+    fast. On forced host devices the absolute numbers measure dispatch/
+    routing overhead, not real parallel speedup (all "devices" share one
+    CPU); the trajectory gate tracks regressions in that overhead."""
+    import jax
+    avail = len(jax.devices())
+    want = np.searchsorted(keys, q, side="left")
+    out = []
+    snap = None
+    for n_dev in MESH_SCALE_DEVS:
+        if n_dev > avail:
+            break
+        if snap is None:
+            svc = PlexService(keys, eps=eps, n_shards=MESH_SCALE_SHARDS,
+                              plan=n_dev)
+            snap = svc._state.snapshot    # one build; spans share it
+        else:
+            svc = PlexService(None, plan=n_dev, _snapshot=snap)
+        got = svc.lookup(q, backend="jnp")
+        assert np.array_equal(got, want), (n_dev, "mesh_scale lookup wrong")
+        n_active = svc.plan.n_active if svc.plan is not None else 1
+        ns = svc.throughput(q, backends=("jnp",),
+                            repeats=REPEATS["jnp"])["jnp"]
+        out.append({
+            "n_devices": n_dev, "n_active": n_active,
+            "ns_per_lookup": ns, "build_s": svc.build_s,
+            "size_bytes": svc.size_bytes,
+        })
+    return out
+
+
 def _run_cold_vs_warm(dname: str, eps: int = ZIPF_EPS,
                       n: int | None = None) -> dict:
     """Durability workload: build (or reuse the cached persisted copy),
@@ -217,7 +263,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
     rows.append("serve,dataset,n,eps,backend,workload,ns_per_lookup,"
                 "build_s,size_bytes,cache_hit_rate,write_frac,merges,"
-                "load_s,first_batch_s,warm_speedup")
+                "load_s,first_batch_s,warm_speedup,n_devices")
     records: list[dict] = []
     for dname, keys in datasets().items():
         q = queries(keys)
@@ -233,7 +279,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                                     repeats=REPEATS[backend])[backend]
                 rows.append(f"serve,{dname},{keys.size},{eps},{backend},"
                             f"uniform,{ns:.1f},{svc.build_s:.3f},"
-                            f"{svc.size_bytes},,,,,,")
+                            f"{svc.size_bytes},,,,,,,")
                 records.append({
                     "dataset": dname, "n": int(keys.size), "eps": int(eps),
                     "backend": backend, "workload": "uniform",
@@ -256,7 +302,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                             repeats=REPEATS["jnp"])["jnp"]
         rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,zipf,"
                     f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes},"
-                    f"{hit_rate:.3f},,,,,")
+                    f"{hit_rate:.3f},,,,,,")
         records.append({
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "zipf",
@@ -270,7 +316,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
         rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,update_mix,"
                     f"{um['ns_per_lookup']:.1f},{um['build_s']:.3f},"
                     f"{um['size_bytes']},,{um['write_frac']:.2f},"
-                    f"{um['merges']},,,")
+                    f"{um['merges']},,,,")
         records.append({
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "update_mix",
@@ -280,12 +326,27 @@ def run(out_rows: list[str] | None = None) -> list[str]:
             "write_frac": float(um["write_frac"]),
             "merges": int(um["merges"]),
         })
+        # distribution: routed mesh throughput at widening plan spans
+        for ms in _run_mesh_scale(keys, q):
+            rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,"
+                        f"mesh_scale,{ms['ns_per_lookup']:.1f},"
+                        f"{ms['build_s']:.3f},{ms['size_bytes']},,,,,,,"
+                        f"{ms['n_devices']}")
+            records.append({
+                "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
+                "backend": "jnp", "workload": "mesh_scale",
+                "ns_per_lookup": round(float(ms["ns_per_lookup"]), 1),
+                "build_s": round(float(ms["build_s"]), 4),
+                "size_bytes": int(ms["size_bytes"]),
+                "n_devices": int(ms["n_devices"]),
+                "n_active": int(ms["n_active"]),
+            })
         # durability: cold build vs warm-start open at COLD_WARM_N keys
         cw = _run_cold_vs_warm(dname)
         rows.append(f"serve,{dname},{cw['n']},{ZIPF_EPS},jnp,cold_vs_warm,"
                     f"{cw['ns_per_lookup']:.1f},{cw['build_s']:.3f},"
                     f"{cw['size_bytes']},,,,{cw['load_s']:.4f},"
-                    f"{cw['first_batch_s']:.4f},{cw['warm_speedup']:.1f}")
+                    f"{cw['first_batch_s']:.4f},{cw['warm_speedup']:.1f},")
         records.append({
             "dataset": dname, "n": int(cw["n"]), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "cold_vs_warm",

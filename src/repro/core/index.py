@@ -167,7 +167,20 @@ class Snapshot:
     builders construct a complete new snapshot off the hot path and publish
     it with a single reference assignment; readers that captured the old
     reference keep a fully consistent index.
+
+    A snapshot may also be a *partial view* of a persisted generation
+    (``persist.format.load_snapshot(shard_range=...)`` — the mesh-serving
+    partial-load path): ``keys``/``offsets`` are then rebased to the local
+    slice and ``shard_base``/``key_base`` record the view's global
+    position, so global row offsets are ``offsets + key_base``. Full
+    snapshots keep the zero defaults, so every existing consumer is
+    unaffected.
     """
+
+    # partial-view metadata (instance attrs set by persist.format loads)
+    shard_base: int = 0           # global index of this view's first shard
+    key_base: int = 0             # global key row of this view's first key
+    mapped_bytes: int = 0         # bytes memmapped by the loader (0 = built)
 
     def __init__(self, keys: np.ndarray, eps: int, offsets: np.ndarray,
                  shards: Sequence[LearnedIndex], *, build_s: float = 0.0,

@@ -1,0 +1,27 @@
+"""Distribution subsystem: shard placement over a device mesh,
+collective-free routed lookups, and partial snapshot loads.
+
+The seam every remaining scale item threads through: ``placement`` turns
+snapshot statics into a device-balanced ``PlacementPlan``; ``partition``
+splits the stacked plane layout into per-device shard-contiguous slabs;
+``routed_lookup`` serves merged lookups with zero cross-device collectives
+(host-side binning, device-local pipelines, host-side re-permutation);
+``loader`` warm-starts each device from only the snapshot bytes its plan
+assigns it.
+"""
+from .loader import (open_device_partition, open_routed, plan_from_dir,
+                     weights_from_header)
+from .partition import (DevicePartition, build_device_impl, device_sharding,
+                        partition_stacked)
+from .placement import (PlacementPlan, partition_contiguous, plan_matches,
+                        plan_placement, scale_by_hotness, shard_hotness,
+                        shard_weights)
+from .routed_lookup import RoutedBatch, RoutedStackedLookup
+
+__all__ = [
+    "DevicePartition", "PlacementPlan", "RoutedBatch", "RoutedStackedLookup",
+    "build_device_impl", "device_sharding", "open_device_partition",
+    "open_routed", "partition_contiguous", "partition_stacked",
+    "plan_from_dir", "plan_matches", "plan_placement", "scale_by_hotness",
+    "shard_hotness", "shard_weights", "weights_from_header",
+]

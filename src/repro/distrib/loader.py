@@ -1,0 +1,132 @@
+"""Partial snapshot loads — per-device warm starts that map only served bytes.
+
+``persist.format.load_snapshot(shard_range=...)`` gives one device a local
+view of a committed generation that memmaps exactly the byte ranges the
+device's placement assigns it. This module is the glue above it:
+
+* ``plan_from_dir`` builds a ``PlacementPlan`` straight from the persisted
+  header — per-shard key counts and spline/layer plane sizes live in the
+  plane directory, so planning reads *no* bulk plane bytes (only the tiny
+  offsets plane and one key per shard for the routing boundaries).
+* ``open_device_partition`` partial-loads one device's shard range and
+  builds its device-local stacked pipeline from the mapped planes plus the
+  persisted statics (the same zero-re-derivation warm path full opens
+  use), with global row offsets restored from the view's ``key_base``.
+* ``open_routed`` does that for every plan device and assembles the
+  ``RoutedStackedLookup`` — the multi-host story in one call: on a real
+  deployment each host runs the ``open_device_partition`` calls for *its*
+  devices only and never touches the rest of the file.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..core.index import Snapshot
+from ..persist.format import (SNAPSHOT_FILE, _map_planes, _read_header,
+                              load_snapshot)
+from .partition import DevicePartition, build_device_impl, device_sharding
+from .placement import (PlacementPlan, _plan_from_arrays, plan_matches,
+                        scale_by_hotness)
+from .routed_lookup import RoutedStackedLookup
+
+
+def weights_from_header(header: dict) -> np.ndarray:
+    """Planner weights from a persisted snapshot header: per-shard key
+    count + spline points + radix/CHT cells, read from the plane directory
+    — identical to ``placement.shard_weights`` on the live snapshot, so a
+    coordinator planning from disk and a service planning from memory
+    produce the same plan."""
+    rows = {e["name"]: e for e in header["planes"]}
+    w = np.empty(int(header["n_shards"]), dtype=np.float64)
+    for i, sm in enumerate(header["shards"]):
+        w[i] = (int(sm["n_real"]) + int(rows[f"s{i}.spline_keys"]["shape"][0])
+                + int(rows[f"s{i}.layer"]["shape"][0]))
+    return w
+
+
+def plan_from_dir(gen_dir: str | pathlib.Path, n_devices: int, *,
+                  hotness: np.ndarray | None = None) -> PlacementPlan:
+    """Placement plan straight from a persisted generation directory.
+
+    Reads the header, the offsets plane, and one key per shard (the
+    routing boundaries) — never a bulk plane. ``hotness`` scales weights
+    exactly as in ``plan_placement``.
+    """
+    path = pathlib.Path(gen_dir) / SNAPSHOT_FILE
+    header, payload_base = _read_header(path)
+    mm, _ = _map_planes(path, header, payload_base, {"offsets", "keys"})
+    offsets = np.asarray(mm["offsets"], dtype=np.int64)
+    shard_min = np.asarray(mm["keys"][offsets])   # one page touch per shard
+    w = scale_by_hotness(weights_from_header(header), hotness)
+    return _plan_from_arrays(offsets, int(header["n_keys"]), shard_min, w,
+                             n_devices)
+
+
+def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
+                          d: int, device: Any, *, block: int,
+                          probe: str | None = None, cache_slots: int = 0,
+                          verify: bool = False
+                          ) -> tuple[DevicePartition, Snapshot | None]:
+    """Partial-load device ``d``'s shard range and build its device-local
+    pipeline. Returns the partition plus the backing partial snapshot
+    (``None`` for an empty device; keep the snapshot alive as long as the
+    partition serves — the planes alias its maps)."""
+    lo, hi = plan.shard_range(d)
+    if lo == hi:
+        return DevicePartition(device=device,
+                               sharding=device_sharding(device),
+                               shard_lo=lo, shard_hi=hi, impl=None), None
+    snap = load_snapshot(gen_dir, shard_range=(lo, hi), verify=verify)
+    row_off = np.asarray(snap.offsets, dtype=np.int64) + snap.key_base
+    impl, sharding = build_device_impl(
+        snap.shards, row_off, device, block=block, probe=probe,
+        cache_slots=cache_slots, host_planes=snap._host_planes_fn())
+    if impl is None:
+        raise ValueError(f"device {d}: shards [{lo}, {hi}) could not be "
+                         f"unified into one stacked pipeline")
+    return DevicePartition(device=device, sharding=sharding, shard_lo=lo,
+                           shard_hi=hi, impl=impl), snap
+
+
+def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
+                devices: Sequence, *, block: int, probe: str | None = None,
+                cache_slots: int = 0, verify: bool = False
+                ) -> tuple[RoutedStackedLookup, list[Snapshot], int]:
+    """Partial-load every plan device and assemble the routed mesh lookup.
+
+    Returns (router, partial snapshots, total mapped bytes). The partial
+    snapshots must outlive the router (their maps back the device planes'
+    host staging); ``mapped_bytes`` sums each device's actual maps — the
+    whole point, and the tests pin it strictly below one full load.
+    """
+    if plan.n_devices > len(devices):
+        raise ValueError(f"plan spans {plan.n_devices} devices but got "
+                         f"{len(devices)}")
+    # bind-check the plan against THIS generation's shard table: a plan cut
+    # from a different generation would misroute silently (reads the tiny
+    # offsets plane + one key per shard, like plan_from_dir)
+    path = pathlib.Path(gen_dir) / SNAPSHOT_FILE
+    header, payload_base = _read_header(path)
+    mm, _ = _map_planes(path, header, payload_base, {"offsets", "keys"})
+    offsets = np.asarray(mm["offsets"], dtype=np.int64)
+    if not plan_matches(plan, offsets, int(header["n_keys"]),
+                        np.asarray(mm["keys"][offsets])):
+        raise ValueError(
+            f"plan does not match the shard table persisted in {gen_dir} "
+            "(stale plan from another generation? re-derive with "
+            "plan_from_dir)")
+    parts: list[DevicePartition] = []
+    snaps: list[Snapshot] = []
+    mapped = 0
+    for d in range(plan.n_devices):
+        part, snap = open_device_partition(
+            gen_dir, plan, d, devices[d], block=block, probe=probe,
+            cache_slots=cache_slots, verify=verify)
+        parts.append(part)
+        if snap is not None:
+            snaps.append(snap)
+            mapped += snap.mapped_bytes
+    return RoutedStackedLookup(plan, parts, block), snaps, mapped

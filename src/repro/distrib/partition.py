@@ -1,0 +1,127 @@
+"""Partitioned stacked planes — per-device shard-contiguous plane slabs.
+
+The stacked layout (``kernels.planes.build_stacked_planes``) fuses shard
+planes into shard-major slabs; before this module every slab lived on one
+device (replication by default placement). The partitioner splits the
+stacked build along a ``PlacementPlan``'s device boundaries instead: each
+device gets *one* ``StackedJnpPlex`` holding only its contiguous shard
+range, placed via a single-device ``NamedSharding`` resolved through the
+``parallel.sharding`` rules — the same placement machinery the training
+stack uses, so a future multi-axis mesh changes the rule table, not this
+code.
+
+Two properties make the split free of new kernel work:
+
+* Row offsets stay **global**: ``build_stacked_planes`` folds each shard's
+  global key offset into the result inside the dispatch, so a device-local
+  pipeline already returns global indices — no re-basing, no gather across
+  devices, byte-identical math to the single-device path.
+* Unification is now **per device**: shards only need compatible static
+  parameters with their slab-mates, so a snapshot whose shards cannot all
+  be unified globally (mixed radix widths, say) may still partition into
+  per-device unifiable slabs.
+
+Empty devices (``n_devices > n_shards``) get a ``DevicePartition`` with no
+impl; the placement plan never routes a query to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..kernels.jnp_lookup import StackedJnpPlex
+from ..parallel.sharding import logical_sharding
+from .placement import PlacementPlan, plan_matches
+
+# plane slabs are device-local state: no logical axis maps them to a mesh
+# axis, so on the 1-device submesh the resolver yields P() = "this device"
+_SLAB_RULES: dict[str, tuple[str, ...]] = {"plex_rows": ()}
+
+
+def device_sharding(device: Any) -> NamedSharding:
+    """Single-device ``NamedSharding`` over a 1-device ``data`` submesh —
+    the placement address of one device's plane slab, resolved through the
+    shared logical-axis rules rather than a bare ``device_put`` so slab
+    placement composes with any future multi-axis mesh."""
+    mesh = Mesh(np.asarray([device]), ("data",))
+    return logical_sharding(("plex_rows",), (1,), mesh, _SLAB_RULES)
+
+
+@dataclasses.dataclass
+class DevicePartition:
+    """One device's slice of the mesh: its shard range, its plane slab's
+    sharding, and the device-local stacked pipeline (``None`` for an empty
+    device — the plan never routes queries there)."""
+    device: Any
+    sharding: NamedSharding
+    shard_lo: int
+    shard_hi: int
+    impl: StackedJnpPlex | None
+
+    @property
+    def n_shards(self) -> int:
+        return self.shard_hi - self.shard_lo
+
+    @property
+    def empty(self) -> bool:
+        return self.impl is None
+
+
+def build_device_impl(shards: Sequence, row_off: np.ndarray, device: Any, *,
+                      block: int, probe: str | None = None,
+                      cache_slots: int = 0, host_planes=None
+                      ) -> tuple[StackedJnpPlex | None, NamedSharding]:
+    """One device's stacked pipeline over ``shards`` with *global*
+    ``row_off``, planes placed on ``device``. Shared by the in-memory
+    partitioner below and the partial-snapshot loader
+    (``distrib.loader``), so both construct byte-identical slabs."""
+    sharding = device_sharding(device)
+    impl = StackedJnpPlex.from_plexes(
+        [s.plex for s in shards], np.asarray(row_off, dtype=np.int64),
+        block=block, probe=probe, cache_slots=cache_slots,
+        host_planes=host_planes, sharding=sharding)
+    return impl, sharding
+
+
+def partition_stacked(snap, plan: PlacementPlan, devices: Sequence, *,
+                      block: int, probe: str | None = None,
+                      cache_slots: int = 0
+                      ) -> list[DevicePartition] | None:
+    """Split ``snap``'s stacked layout into per-device slabs along
+    ``plan``'s boundaries.
+
+    Returns one ``DevicePartition`` per plan device, or ``None`` when any
+    non-empty device's shard subset cannot be unified (the serving layer
+    falls back to the legacy path, exactly like the single-device
+    unification gate). ``devices`` is the mesh's device list; the plan
+    must fit inside it.
+    """
+    if plan.n_devices > len(devices):
+        raise ValueError(f"plan spans {plan.n_devices} devices but the mesh "
+                         f"has {len(devices)}")
+    if not plan_matches(plan, snap.offsets, snap.keys.size, snap.shard_min):
+        raise ValueError(
+            "plan does not match this snapshot's shard table (stale plan "
+            "from a previous snapshot? re-derive with plan_placement)")
+    hp_fn = getattr(snap, "_host_planes_fn", None)
+    parts: list[DevicePartition] = []
+    for d in range(plan.n_devices):
+        lo, hi = plan.shard_range(d)
+        if lo == hi:
+            parts.append(DevicePartition(device=devices[d],
+                                         sharding=device_sharding(devices[d]),
+                                         shard_lo=lo, shard_hi=hi, impl=None))
+            continue
+        row_off = np.asarray(snap.offsets[lo:hi], dtype=np.int64)
+        hps = hp_fn(lo, hi) if hp_fn is not None else None
+        impl, sharding = build_device_impl(
+            snap.shards[lo:hi], row_off, devices[d], block=block,
+            probe=probe, cache_slots=cache_slots, host_planes=hps)
+        if impl is None:
+            return None
+        parts.append(DevicePartition(device=devices[d], sharding=sharding,
+                                     shard_lo=lo, shard_hi=hi, impl=impl))
+    return parts

@@ -1,0 +1,188 @@
+"""Collective-free routed mesh lookup over per-device plane slabs.
+
+The multi-device serving hot path. Division of labour:
+
+* **Host staging** bins a query batch to owning devices with one
+  predecessor count over the plan's device boundary keys
+  (``PlacementPlan.device_of`` — the same searchsorted the shard router
+  already is), then stable-sorts the batch into per-device contiguous
+  runs.
+* **Each device** runs the *existing* stacked pipeline — routing over its
+  local shard minima, radix/CHT descent, eps-window probe, per-shard
+  clamp, global-offset fold, and the merged delta fold — entirely on its
+  own slab. Because row offsets are global (``distrib.partition``), every
+  device emits final global indices. There is **zero cross-device
+  communication inside any compiled dispatch**: each jit call touches one
+  device's committed arrays only (the zero-collective test compiles a
+  dispatch and greps its HLO). Still one dispatch per micro-batch per
+  device, all dispatched eagerly, one sync for the whole batch.
+* **Re-permutation** back to input order is a host-side inverse of the
+  staging sort — numpy fancy indexing, no device work.
+
+The delta buffer is replicated to every serving device
+(``move_delta_planes``; it is bounded by the merge threshold, so the copy
+is trivially small next to one plane slab) and cached per published delta
+state, so an unchanged delta costs zero copies per lookup and a mutation
+invalidates every device's replica at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+from ..kernels.jnp_lookup import LaneResult
+from ..kernels.pairs import split_u64
+from ..kernels.planes import (DeltaPlanes, build_delta_planes,
+                              move_delta_planes, pad_queries)
+from .partition import DevicePartition
+from .placement import PlacementPlan
+
+
+@dataclasses.dataclass
+class RoutedBatch:
+    """Bookkeeping for one in-flight routed batch: the async per-device
+    lane results plus everything needed to reassemble input order at the
+    single sync point."""
+    order: np.ndarray                  # staging sort permutation
+    spans: list[tuple[int, int, list[LaneResult]]]  # (start, n, lanes)
+    n_batches: int
+    padded_lanes: int
+
+    def assemble(self, n: int) -> np.ndarray:
+        """THE sync point: materialise every lane result and invert the
+        staging permutation."""
+        out_sorted = np.empty(n, dtype=np.int64)
+        for start, count, lanes in self.spans:
+            arr = np.concatenate([np.asarray(r.out) for r in lanes])
+            out_sorted[start:start + count] = arr[:count]
+        out = np.empty(n, dtype=np.int64)
+        out[self.order] = out_sorted
+        return out
+
+    def lane_results(self):
+        for _, _, lanes in self.spans:
+            yield from lanes
+
+
+class RoutedStackedLookup:
+    """Mesh-routed merged lookup: plan + per-device stacked slabs.
+
+    ``parts`` is the full per-device partition (one entry per plan
+    device, empty devices included). The instance owns the per-device
+    delta replicas' cache; everything else is immutable after
+    construction and retires with its snapshot at a swap, exactly like
+    the single-device stacked impl.
+    """
+
+    def __init__(self, plan: PlacementPlan, parts: Sequence[DevicePartition],
+                 block: int):
+        if len(parts) != plan.n_devices:
+            raise ValueError(f"{len(parts)} partitions != plan's "
+                             f"{plan.n_devices} devices")
+        self.plan = plan
+        self.parts = list(parts)
+        self.block = int(block)
+        # (source view, {device: replica}) published as ONE tuple so
+        # lock-free readers can never pair a replica with the wrong view
+        self._delta_cache: tuple[Any, dict[int, DeltaPlanes]] | None = None
+
+    @property
+    def n_devices(self) -> int:
+        return self.plan.n_devices
+
+    @property
+    def n_active(self) -> int:
+        return self.plan.n_active
+
+    def _replicas_for(self, dp: DeltaPlanes) -> dict[int, DeltaPlanes]:
+        """The per-device replica table for source view ``dp``, cached per
+        view identity (the buffer publishes a fresh view per mutation, so
+        identity equality is exactly state equality).
+
+        Safe for concurrent lock-free readers holding *different* captured
+        views: the (source, replicas) pair is captured and published as a
+        single reference — a mismatching reader builds a fresh table for
+        its own view instead of resetting a shared one, so no reader can
+        ever receive a replica of someone else's delta state. Concurrent
+        same-view readers may duplicate a device_put (identical content;
+        last write wins), never corrupt."""
+        cache = self._delta_cache
+        if cache is None or cache[0] is not dp:
+            cache = (dp, {})
+            self._delta_cache = cache
+        return cache[1]
+
+    def dispatch(self, q: np.ndarray, delta: DeltaPlanes | None = None
+                 ) -> RoutedBatch:
+        """Bin ``q`` to devices and dispatch every micro-batch eagerly
+        (async); no sync happens here. Call ``RoutedBatch.assemble`` (or
+        ``lookup``) for the one blocking materialisation."""
+        dev = self.plan.device_of(q)
+        order = np.argsort(dev, kind="stable")
+        qs = q[order]
+        counts = np.bincount(dev, minlength=self.plan.n_devices)
+        # one replica-table capture per batch: every device's fold below
+        # uses the same delta view this dispatch was called with
+        reps = self._replicas_for(delta) if delta is not None else None
+        spans: list[tuple[int, int, list[LaneResult]]] = []
+        n_batches = padded = 0
+        pos = 0
+        for d in self.plan.active:
+            n_d = int(counts[d])
+            if n_d == 0:
+                continue
+            part = self.parts[d]
+            dp = None
+            if reps is not None:
+                dp = reps.get(int(d))
+                if dp is None:
+                    dp = move_delta_planes(delta, part.sharding)
+                    reps[int(d)] = dp
+            qp, b = pad_queries(qs[pos:pos + n_d], self.block)
+            qh, ql = split_u64(qp)
+            lanes = []
+            for i in range(0, qp.size, self.block):
+                nv = min(self.block, max(b - i, 1))
+                lanes.append(part.impl.lookup_planes(
+                    jax.device_put(qh[i:i + self.block], part.sharding),
+                    jax.device_put(ql[i:i + self.block], part.sharding),
+                    n_valid=nv, delta=dp))
+            spans.append((pos, n_d, lanes))
+            n_batches += len(lanes)
+            padded += len(lanes) * self.block - b
+            pos += n_d
+        return RoutedBatch(order=order, spans=spans, n_batches=n_batches,
+                           padded_lanes=padded)
+
+    def lookup(self, q: np.ndarray, delta: DeltaPlanes | None = None
+               ) -> tuple[np.ndarray, RoutedBatch]:
+        """Whole-batch routed (merged) lookup: global int64 indices in
+        input order, plus the batch bookkeeping (dispatch counts + cache
+        telemetry) for the serving layer's stats."""
+        batch = self.dispatch(q, delta)
+        return batch.assemble(q.size), batch
+
+    def warmup(self, sample_key: np.uint64,
+               delta_cap: int | None = None) -> None:
+        """Compile each active device's exact serving dispatch (and, when
+        ``delta_cap`` is given, the merged variant at that capacity,
+        warmed with a zero-weight dummy entry that changes no result)."""
+        for d in self.plan.active:
+            part = self.parts[d]
+            qp, _ = pad_queries(np.asarray([sample_key], np.uint64),
+                                self.block)
+            qh, ql = split_u64(qp)
+            qhi = jax.device_put(qh, part.sharding)
+            qlo = jax.device_put(ql, part.sharding)
+            jax.block_until_ready(
+                part.impl.lookup_planes(qhi, qlo, n_valid=1).out)
+            if delta_cap:
+                dummy = build_delta_planes(
+                    np.asarray([sample_key], np.uint64),
+                    np.zeros(1, np.int64), delta_cap)
+                jax.block_until_ready(part.impl.lookup_planes(
+                    qhi, qlo, n_valid=1,
+                    delta=move_delta_planes(dummy, part.sharding)).out)

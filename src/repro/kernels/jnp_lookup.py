@@ -284,6 +284,7 @@ class StackedJnpPlex:
     block: int
     probe: str
     cache_slots: int = 0
+    sharding: Any = None      # device placement of the planes (distrib)
     _fn: Any = None           # delta-free pipeline (read-only epochs)
     _cached_fn: Any = None    # delta-free pipeline + hot-key cache
     _cache: Any = None        # uint32 [3, n_slots] device array or None
@@ -293,27 +294,34 @@ class StackedJnpPlex:
     @classmethod
     def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
                     block: int = DEFAULT_BLOCK, probe: str | None = None,
-                    cache_slots: int = 0,
-                    host_planes=None) -> "StackedJnpPlex | None":
+                    cache_slots: int = 0, host_planes=None,
+                    sharding=None) -> "StackedJnpPlex | None":
         """Build the fused stacked path, or ``None`` when the shards' static
         parameters cannot be unified (the caller falls back to per-shard
         dispatch). ``host_planes`` feeds a persisted snapshot's precomputed
-        per-shard planes straight through (warm start, no re-derivation)."""
+        per-shard planes straight through (warm start, no re-derivation).
+        ``sharding`` places the planes (and the hot-key cache state) on one
+        mesh device — the distrib partitioner's per-device slab placement;
+        queries fed to ``lookup_planes`` must then be committed to the same
+        device so the dispatch stays device-local."""
         probe = probe or default_probe_mode()
         if probe not in PROBE_MODES:
             raise ValueError(f"unknown probe mode {probe!r}")
         if cache_slots and cache_slots & (cache_slots - 1):
             raise ValueError("cache_slots must be a power of two")
-        sp = build_stacked_planes(plexes, row_off, host_planes=host_planes)
+        sp = build_stacked_planes(plexes, row_off, host_planes=host_planes,
+                                  sharding=sharding)
         if sp is None:
             return None
         st = cls(planes=sp, block=block, probe=probe,
-                 cache_slots=int(cache_slots))
+                 cache_slots=int(cache_slots), sharding=sharding)
         st._fn = jax.jit(functools.partial(_stacked_pipeline, sp, probe))
         if cache_slots:
             st._cached_fn = jax.jit(
                 functools.partial(_stacked_cached, sp, probe, 0))
-            st._cache = jnp.full((3, cache_slots), _CACHE_EMPTY, jnp.uint32)
+            cache = np.full((3, cache_slots), _CACHE_EMPTY, np.uint32)
+            st._cache = (jnp.asarray(cache) if sharding is None
+                         else jax.device_put(cache, sharding))
         return st
 
     @property
@@ -325,8 +333,9 @@ class StackedJnpPlex:
         delta-independent snapshot ranks — but kept for manual telemetry
         resets; a snapshot swap retires the whole impl (cache included)."""
         if self._cache is not None:
-            self._cache = jnp.full((3, self.cache_slots), _CACHE_EMPTY,
-                                   jnp.uint32)
+            cache = np.full((3, self.cache_slots), _CACHE_EMPTY, np.uint32)
+            self._cache = (jnp.asarray(cache) if self.sharding is None
+                           else jax.device_put(cache, self.sharding))
 
     def _merged_fn(self, cap: int):
         fn = self._merged_fns.get(cap)

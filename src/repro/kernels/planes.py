@@ -39,8 +39,10 @@ depends on it:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -226,6 +228,16 @@ class DeltaPlanes:
     n_entries: int            # real (unpadded) entries
 
 
+def move_delta_planes(dp: DeltaPlanes, sharding: Any) -> DeltaPlanes:
+    """Re-place a delta buffer's device view onto ``sharding`` (device-to-
+    device copy, async). The routed mesh path replicates the (small) delta
+    onto every serving device so the merged fold stays device-local."""
+    return DeltaPlanes(khi=jax.device_put(dp.khi, sharding),
+                       klo=jax.device_put(dp.klo, sharding),
+                       cum0=jax.device_put(dp.cum0, sharding),
+                       cap=dp.cap, n_entries=dp.n_entries)
+
+
 def build_delta_planes(keys: np.ndarray, weights: np.ndarray,
                        cap: int) -> DeltaPlanes:
     """Sorted delta entries -> padded device planes (see ``DeltaPlanes``)."""
@@ -281,21 +293,32 @@ class StackedPlanes:
 
 
 def build_stacked_planes(plexes: Sequence[PLEX], row_off: np.ndarray,
-                         host_planes: Sequence[_HostPlanes] | None = None
-                         ) -> StackedPlanes | None:
+                         host_planes: Sequence[_HostPlanes] | None = None,
+                         sharding: Any = None) -> StackedPlanes | None:
     """Fuse shard-local PLEX indexes into one ``StackedPlanes``.
 
     ``row_off[s]`` is shard ``s``'s global key offset (the serving layer's
-    shard table). Returns ``None`` when the shards' layers cannot be
-    unified under one jit'd pipeline: mixed layer kinds, CHT shards with
-    different radix widths, or a global key count past int32 range (the
-    on-device global index plane is int32).
+    shard table) — pass *global* offsets for a contiguous shard subset and
+    the stacked pipeline's results stay global with no extra fold, which
+    is what the mesh partitioner (``distrib.partition``) relies on.
+    Returns ``None`` when the shards' layers cannot be unified under one
+    jit'd pipeline: mixed layer kinds, CHT shards with different radix
+    widths, or a global key count past int32 range (the on-device global
+    index plane is int32).
 
     ``host_planes`` short-circuits the per-shard host derivation: a
     memmapped snapshot (``persist.format``) supplies ``_HostPlanes`` built
     from the mapped arrays + persisted statics, so a warm start never
     recomputes slack/window/layer parameters.
+
+    ``sharding`` places every device plane (a ``jax.sharding.Sharding`` or
+    device; default = the uncommitted default device). The mesh
+    partitioner passes a single-device ``NamedSharding`` so each device
+    holds only its own shard-contiguous slab instead of a replica of all
+    of them.
     """
+    put = (jnp.asarray if sharding is None
+           else functools.partial(jax.device_put, device=sharding))
     hps = (list(host_planes) if host_planes is not None
            else [_host_planes(px) for px in plexes])
     kinds = {hp.kind for hp in hps}
@@ -335,16 +358,16 @@ def build_stacked_planes(plexes: Sequence[PLEX], row_off: np.ndarray,
         table_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         max_win = max(hp.static["max_win"] for hp in hps)
         layer_arrays = {
-            "table": jnp.asarray(np.concatenate(tables)),
-            "table_off": jnp.asarray(table_off.astype(np.int32)),
-            "shift": jnp.asarray(
+            "table": put(np.concatenate(tables)),
+            "table_off": put(table_off.astype(np.int32)),
+            "shift": put(
                 np.asarray([hp.static["shift"] for hp in hps], np.int32)),
-            "p_max": jnp.asarray(
+            "p_max": put(
                 np.asarray([(1 << hp.static["r"]) - 1 for hp in hps],
                            np.int32)),
-            "lmin_hi": jnp.asarray(
+            "lmin_hi": put(
                 np.asarray([hp.static["min_hi"] for hp in hps], np.uint32)),
-            "lmin_lo": jnp.asarray(
+            "lmin_lo": put(
                 np.asarray([hp.static["min_lo"] for hp in hps], np.uint32)),
         }
         static = dict(max_win=int(max_win),
@@ -356,9 +379,9 @@ def build_stacked_planes(plexes: Sequence[PLEX], row_off: np.ndarray,
         cells_off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         delta_max = max(hp.static["delta"] for hp in hps)
         layer_arrays = {
-            "cells": jnp.asarray(np.concatenate(cells)),
-            "cells_off": jnp.asarray(cells_off.astype(np.int32)),
-            "delta": jnp.asarray(
+            "cells": put(np.concatenate(cells)),
+            "cells_off": put(cells_off.astype(np.int32)),
+            "delta": put(
                 np.asarray([hp.static["delta"] for hp in hps], np.int32)),
         }
         static = dict(r=int(hps[0].static["r"]),
@@ -368,14 +391,14 @@ def build_stacked_planes(plexes: Sequence[PLEX], row_off: np.ndarray,
                       else "bisect")
 
     return StackedPlanes(
-        skhi=jnp.asarray(skh.reshape(-1)), sklo=jnp.asarray(skl.reshape(-1)),
-        spos=jnp.asarray(spos.reshape(-1)), dhi=jnp.asarray(dh.reshape(-1)),
-        dlo=jnp.asarray(dl.reshape(-1)),
-        n_spline=jnp.asarray(
+        skhi=put(skh.reshape(-1)), sklo=put(skl.reshape(-1)),
+        spos=put(spos.reshape(-1)), dhi=put(dh.reshape(-1)),
+        dlo=put(dl.reshape(-1)),
+        n_spline=put(
             np.asarray([hp.skh.size for hp in hps], np.int32)),
-        n_real=jnp.asarray(np.asarray([hp.n_real for hp in hps], np.int32)),
-        row_off=jnp.asarray(np.asarray(row_off, np.int32)),
-        min_hi=jnp.asarray(min_hi), min_lo=jnp.asarray(min_lo),
+        n_real=put(np.asarray([hp.n_real for hp in hps], np.int32)),
+        row_off=put(np.asarray(row_off, np.int32)),
+        min_hi=put(min_hi), min_lo=put(min_lo),
         n_shards=s_count, n_spline_max=n_spline_max, n_data_max=n_data_max,
         n_real_total=n_real_total, kind=kind, layer_arrays=layer_arrays,
         static=static, eps_eff=eps_eff, window=window)

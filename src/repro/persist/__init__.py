@@ -25,11 +25,11 @@ from .format import (SNAPSHOT_FILE, CorruptSnapshotError, load_snapshot,
                      save_snapshot, validate_snapshot)
 from .manifest import (MANIFEST_NAME, CorruptManifestError, Manifest,
                        gen_name, read_manifest, wal_name, write_manifest)
-from .wal import OP_DELETE, OP_INSERT, WriteAheadLog
+from .wal import OP_CHECKPOINT, OP_DELETE, OP_INSERT, WriteAheadLog
 
 __all__ = [
     "CorruptManifestError", "CorruptSnapshotError", "MANIFEST_NAME",
-    "Manifest", "OP_DELETE", "OP_INSERT", "SNAPSHOT_FILE", "WriteAheadLog",
-    "gen_name", "load_snapshot", "read_manifest", "save_snapshot",
-    "validate_snapshot", "wal_name", "write_manifest",
+    "Manifest", "OP_CHECKPOINT", "OP_DELETE", "OP_INSERT", "SNAPSHOT_FILE",
+    "WriteAheadLog", "gen_name", "load_snapshot", "read_manifest",
+    "save_snapshot", "validate_snapshot", "wal_name", "write_manifest",
 ]

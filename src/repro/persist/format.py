@@ -193,11 +193,19 @@ def _read_header(path: pathlib.Path) -> tuple[dict, int]:
     return json.loads(hjson), _align(len(MAGIC) + _FIXED.size + hlen)
 
 
-def _map_planes(path: pathlib.Path, header: dict,
-                payload_base: int) -> dict[str, np.ndarray]:
+def _map_planes(path: pathlib.Path, header: dict, payload_base: int,
+                names: set[str] | None = None
+                ) -> tuple[dict[str, np.ndarray], int]:
+    """Memmap the named planes (all of them by default). Returns the map
+    plus the total bytes actually mapped — partial loads assert they map
+    strictly less than a full load, so the accounting is part of the
+    contract, not telemetry."""
     size = path.stat().st_size
     mm: dict[str, np.ndarray] = {}
+    mapped = 0
     for e in header["planes"]:
+        if names is not None and e["name"] not in names:
+            continue
         off = payload_base + e["offset"]
         if off + e["nbytes"] > size:
             raise CorruptSnapshotError(
@@ -206,7 +214,28 @@ def _map_planes(path: pathlib.Path, header: dict,
         mm[e["name"]] = np.memmap(path, dtype=np.dtype(e["dtype"]),
                                   mode="r", offset=off,
                                   shape=tuple(e["shape"]))
-    return mm
+        mapped += int(e["nbytes"])
+    return mm, mapped
+
+
+def _map_key_slice(path: pathlib.Path, header: dict, payload_base: int,
+                   k_lo: int, k_hi: int) -> tuple[np.ndarray, int]:
+    """Memmap rows [k_lo, k_hi) of the global key plane only — the raw
+    little-endian fixed-width layout makes the byte offsets exact, so a
+    device's host never maps key bytes outside its assigned range."""
+    entry = next(e for e in header["planes"] if e["name"] == "keys")
+    itemsize = np.dtype(entry["dtype"]).itemsize
+    if not (0 <= k_lo <= k_hi <= int(entry["shape"][0])):
+        raise ValueError(f"key range [{k_lo}, {k_hi}) outside plane "
+                         f"shape {entry['shape']}")
+    off = payload_base + entry["offset"] + k_lo * itemsize
+    nbytes = (k_hi - k_lo) * itemsize
+    if off + nbytes > path.stat().st_size:
+        raise CorruptSnapshotError(
+            f"{path}: key slice extends past EOF")
+    sl = np.memmap(path, dtype=np.dtype(entry["dtype"]), mode="r",
+                   offset=off, shape=(k_hi - k_lo,))
+    return sl, nbytes
 
 
 def validate_snapshot(gen_dir: str | pathlib.Path) -> bool:
@@ -215,7 +244,7 @@ def validate_snapshot(gen_dir: str | pathlib.Path) -> bool:
     whole file verifies."""
     path = pathlib.Path(gen_dir) / SNAPSHOT_FILE
     header, payload_base = _read_header(path)
-    mm = _map_planes(path, header, payload_base)
+    mm, _ = _map_planes(path, header, payload_base)
     for e in header["planes"]:
         if _crc(mm[e["name"]]) != e["crc32"]:
             raise CorruptSnapshotError(
@@ -247,18 +276,21 @@ def _build_layer(meta: dict, cells: np.ndarray):
 
 
 def _host_planes_from_mapped(header: dict, mm: dict[str, np.ndarray],
+                             shard_ids: Sequence[int],
                              bounds: Sequence[tuple[int, int]]
                              ) -> list[_HostPlanes]:
     """Reassemble the stacked builder's per-shard ``_HostPlanes`` from the
     mapped planes + persisted statics — the zero-re-derivation warm path.
-    The u64 -> u32 plane split is the one O(n) op left; the device upload
-    would copy those bytes regardless."""
+    ``shard_ids`` are absolute header shard indexes; ``bounds`` index the
+    (possibly partial) mapped key plane in ``mm["keys"]``. The u64 -> u32
+    plane split is the one O(n) op left; the device upload would copy
+    those bytes regardless."""
     keys = mm["keys"]
     hps = []
-    for i, sm in enumerate(header["shards"]):
+    for i, (lo, hi) in zip(shard_ids, bounds):
+        sm = header["shards"][i]
         skh, skl = split_u64(np.asarray(mm[f"s{i}.spline_keys"]))
         spos = np.asarray(mm[f"s{i}.spline_pos"]).astype(np.float32)
-        lo, hi = bounds[i]
         padded = np.full(sm["n_data"], _U64_MAX, dtype=np.uint64)
         padded[:sm["n_real"]] = keys[lo:hi]
         dh, dl = split_u64(padded)
@@ -272,48 +304,125 @@ def _host_planes_from_mapped(header: dict, mm: dict[str, np.ndarray],
     return hps
 
 
-def load_snapshot(gen_dir: str | pathlib.Path, *,
-                  verify: bool = False) -> Snapshot:
+def _shard_plane_names(lo: int, hi: int) -> set[str]:
+    return {f"s{i}.{p}" for i in range(lo, hi)
+            for p in ("spline_keys", "spline_pos", "layer")}
+
+
+def _assemble_shards(header: dict, mm: dict[str, np.ndarray],
+                     shard_ids: Sequence[int],
+                     bounds: Sequence[tuple[int, int]],
+                     eps: int) -> list[LearnedIndex]:
+    keys = mm["keys"]
+    shards = []
+    for i, (lo, hi) in zip(shard_ids, bounds):
+        sm = header["shards"][i]
+        spline = Spline(keys=mm[f"s{i}.spline_keys"],
+                        positions=mm[f"s{i}.spline_pos"],
+                        eps=int(sm["spline_eps"]), n_keys=int(sm["n_real"]))
+        layer = _build_layer(sm, mm[f"s{i}.layer"])
+        px = PLEX(spline=spline, layer=layer, tuning=_stub_tuning(sm),
+                  keys=keys[lo:hi], eps=eps,
+                  stats=BuildStats(0.0, 0.0, 0.0, 0.0))
+        shards.append(LearnedIndex(plex=px))
+    return shards
+
+
+def load_snapshot(gen_dir: str | pathlib.Path, *, verify: bool = False,
+                  shard_range: tuple[int, int] | None = None) -> Snapshot:
     """Memmap one committed generation back into an immutable ``Snapshot``.
 
     No index construction happens: shards wrap the mapped arrays directly,
     and the stacked device layout (built lazily at the first jnp lookup)
     consumes the mapped planes plus the persisted statics via the
     snapshot's ``host_planes_fn`` hook.
+
+    ``shard_range=(lo, hi)`` is the partial-load path for mesh serving: it
+    maps *only* the byte ranges those shards need — the tiny offsets
+    plane, the per-shard spline/layer planes in range, and the exact key
+    rows the range covers (``_map_key_slice``; the raw 64B-aligned layout
+    makes the offsets exact) — so a host never touches bytes it does not
+    serve. The returned snapshot is a *local view*: ``keys``/``offsets``
+    are rebased to the slice, while ``shard_base``/``key_base`` record the
+    global position (the partitioner adds ``key_base`` back to get global
+    row offsets). ``mapped_bytes`` reports exactly what was mapped; the
+    distrib tests pin it strictly below a full load's. Under ``verify``
+    the partial path checks every *fully* mapped plane's CRC (the sliced
+    key plane cannot be verified without reading bytes outside the slice,
+    which would defeat the point).
     """
     gen_dir = pathlib.Path(gen_dir)
     path = gen_dir / SNAPSHOT_FILE
     header, payload_base = _read_header(path)
-    mm = _map_planes(path, header, payload_base)
+    eps = int(header["eps"])
+    n_shards = int(header["n_shards"])
+    n_keys = int(header["n_keys"])
+
+    if shard_range is None:
+        mm, mapped = _map_planes(path, header, payload_base)
+        if verify:
+            for e in header["planes"]:
+                if _crc(mm[e["name"]]) != e["crc32"]:
+                    raise CorruptSnapshotError(
+                        f"{path}: plane {e['name']} checksum mismatch")
+        keys = mm["keys"]
+        offsets = np.asarray(mm["offsets"], dtype=np.int64)
+        if keys.size != n_keys or offsets.size != n_shards:
+            raise CorruptSnapshotError(f"{path}: header/plane shape mismatch")
+        shard_ids = list(range(n_shards))
+        bounds = [(int(offsets[i]),
+                   int(offsets[i + 1]) if i + 1 < offsets.size else n_keys)
+                  for i in range(offsets.size)]
+        shards = _assemble_shards(header, mm, shard_ids, bounds, eps)
+        all_bounds = bounds
+
+        def fn(lo: int = 0, hi: int | None = None) -> list[_HostPlanes]:
+            hi_ = n_shards if hi is None else hi
+            return _host_planes_from_mapped(
+                header, mm, range(lo, hi_), all_bounds[lo:hi_])
+
+        snap = Snapshot(keys, eps, offsets, shards,
+                        build_s=float(header["build_s"]),
+                        epoch=int(header["epoch"]), host_planes_fn=fn)
+        snap.mapped_bytes = mapped
+        return snap
+
+    s_lo, s_hi = int(shard_range[0]), int(shard_range[1])
+    if not (0 <= s_lo < s_hi <= n_shards):
+        raise ValueError(f"shard_range ({s_lo}, {s_hi}) outside "
+                         f"[0, {n_shards}]")
+    names = {"offsets"} | _shard_plane_names(s_lo, s_hi)
+    mm, mapped = _map_planes(path, header, payload_base, names)
     if verify:
         for e in header["planes"]:
-            if _crc(mm[e["name"]]) != e["crc32"]:
+            if e["name"] in mm and _crc(mm[e["name"]]) != e["crc32"]:
                 raise CorruptSnapshotError(
                     f"{path}: plane {e['name']} checksum mismatch")
-
-    keys = mm["keys"]
-    offsets = np.asarray(mm["offsets"], dtype=np.int64)
-    if keys.size != header["n_keys"] or offsets.size != header["n_shards"]:
+    offsets_g = np.asarray(mm["offsets"], dtype=np.int64)
+    if offsets_g.size != n_shards:
         raise CorruptSnapshotError(f"{path}: header/plane shape mismatch")
-    eps = int(header["eps"])
-    bounds = [(int(offsets[i]),
-               int(offsets[i + 1]) if i + 1 < offsets.size else keys.size)
-              for i in range(offsets.size)]
+    k_lo = int(offsets_g[s_lo])
+    k_hi = int(offsets_g[s_hi]) if s_hi < n_shards else n_keys
+    key_slice, key_bytes = _map_key_slice(path, header, payload_base,
+                                          k_lo, k_hi)
+    mm["keys"] = key_slice
+    mapped += key_bytes
+    shard_ids = list(range(s_lo, s_hi))
+    bounds = [(int(offsets_g[i]) - k_lo,
+               (int(offsets_g[i + 1]) if i + 1 < n_shards else n_keys) - k_lo)
+              for i in shard_ids]
+    shards = _assemble_shards(header, mm, shard_ids, bounds, eps)
+    local_bounds = bounds
 
-    shards = []
-    for i, sm in enumerate(header["shards"]):
-        spline = Spline(keys=mm[f"s{i}.spline_keys"],
-                        positions=mm[f"s{i}.spline_pos"],
-                        eps=int(sm["spline_eps"]), n_keys=int(sm["n_real"]))
-        layer = _build_layer(sm, mm[f"s{i}.layer"])
-        lo, hi = bounds[i]
-        px = PLEX(spline=spline, layer=layer, tuning=_stub_tuning(sm),
-                  keys=keys[lo:hi], eps=eps,
-                  stats=BuildStats(0.0, 0.0, 0.0, 0.0))
-        shards.append(LearnedIndex(plex=px))
+    def fn_partial(lo: int = 0, hi: int | None = None) -> list[_HostPlanes]:
+        hi_ = (s_hi - s_lo) if hi is None else hi
+        return _host_planes_from_mapped(
+            header, mm, range(s_lo + lo, s_lo + hi_), local_bounds[lo:hi_])
 
-    fn: Callable[[], list[_HostPlanes]] = (
-        lambda: _host_planes_from_mapped(header, mm, bounds))
-    return Snapshot(keys, eps, offsets, shards,
+    snap = Snapshot(key_slice, eps, offsets_g[s_lo:s_hi] - k_lo, shards,
                     build_s=float(header["build_s"]),
-                    epoch=int(header["epoch"]), host_planes_fn=fn)
+                    epoch=int(header["epoch"]), host_planes_fn=fn_partial)
+    snap.shard_base = s_lo
+    snap.key_base = k_lo
+    snap.mapped_bytes = mapped
+    return snap

@@ -20,6 +20,18 @@ and reports how many trailing bytes were discarded; the caller (service
 ``open``) logs the discard and truncates the file back to the valid prefix
 before appending again, so garbage can never be buried under new records.
 
+Rotation (bounded recovery): a write-heavy epoch can append far more
+record bytes than the delta it nets out to (insert/delete churn), making
+replay cost proportional to *history* rather than *state*. ``rotate``
+compacts the segment in place: a fresh segment seeded with a
+``OP_CHECKPOINT`` record plus the buffer's replay-equivalent pending ops
+is written to a temp file and atomically renamed over the live one — a
+crash before the rename leaves the full old segment authoritative, after
+it the compacted equivalent. ``replay`` restarts its record list at the
+*last* checkpoint record, so both rename-compacted segments and any
+future append-a-checkpoint scheme recover identically. The manifest never
+changes: rotation preserves the generation's WAL name.
+
 Durability: every append flushes, and fsyncs when the log was opened with
 ``fsync=True`` (the default for durable services; tests and benchmarks may
 trade the fsync for speed — the prefix-recovery contract is unchanged).
@@ -34,13 +46,28 @@ import zlib
 
 import numpy as np
 
+from .manifest import fsync_dir
+
 log = logging.getLogger("repro.persist")
 
 MAGIC = b"PLEXWAL1"
 OP_INSERT = 1
 OP_DELETE = 2
-_OPS = (OP_INSERT, OP_DELETE)
+OP_CHECKPOINT = 3                  # state reset marker (rotation seam)
+_OPS = (OP_INSERT, OP_DELETE)      # appendable mutation opcodes
+_ALL_OPS = (OP_INSERT, OP_DELETE, OP_CHECKPOINT)
 _REC = struct.Struct("<IIB")       # crc32, payload nbytes, opcode
+
+
+def _encode_record(op: int, keys) -> bytes:
+    """THE record framing (crc over opcode byte + payload, then the fixed
+    header, then raw little-endian u64 keys) — single encoder shared by
+    ``append`` and ``rotate`` so the two write paths can never drift."""
+    if op not in _ALL_OPS:
+        raise ValueError(f"unknown WAL opcode {op}")
+    payload = np.ascontiguousarray(keys, dtype="<u8").tobytes()
+    return _REC.pack(zlib.crc32(bytes([op]) + payload),
+                     len(payload), op) + payload
 
 
 class WriteAheadLog:
@@ -86,9 +113,7 @@ class WriteAheadLog:
         the caller may only mutate the in-memory delta afterwards."""
         if op not in _OPS:
             raise ValueError(f"unknown WAL opcode {op}")
-        payload = np.ascontiguousarray(keys, dtype="<u8").tobytes()
-        rec = _REC.pack(zlib.crc32(bytes([op]) + payload),
-                        len(payload), op) + payload
+        rec = _encode_record(op, keys)
         self._fh.write(rec)
         self._fh.flush()
         if self.fsync:
@@ -98,6 +123,37 @@ class WriteAheadLog:
     @property
     def size_bytes(self) -> int:
         return self._fh.tell()
+
+    def rotate(self, ops) -> "WriteAheadLog":
+        """Compact this segment in place and return the fresh handle.
+
+        ``ops`` is an iterable of ``(opcode, keys)`` replay-equivalent to
+        the live delta (``DeltaBuffer.pending_ops`` order: deletes before
+        inserts). The new segment — magic, one ``OP_CHECKPOINT`` record,
+        then the seed ops — is fully written and fsync'd to a temp file
+        *before* the atomic rename, so a crash at any point leaves either
+        the complete old history or the complete compacted state, never a
+        mix. This handle is closed; append to the returned one.
+        """
+        tmp = self.path.with_suffix(self.path.suffix + ".rot")
+        fh = open(tmp, "wb")
+        fh.write(MAGIC)
+        fh.write(_encode_record(OP_CHECKPOINT, np.zeros(0, dtype=np.uint64)))
+        for op, keys in ops:
+            if op not in _OPS:
+                raise ValueError(f"unknown WAL opcode {op}")
+            fh.write(_encode_record(op, keys))
+        fh.flush()
+        if self.fsync:
+            os.fsync(fh.fileno())
+        os.replace(tmp, self.path)         # the rotation commit point
+        if self.fsync:
+            fsync_dir(self.path.parent)
+        old_bytes = self.size_bytes
+        self.close()
+        log.info("rotate(%s): compacted %d -> %d bytes", self.path,
+                 old_bytes, fh.tell())
+        return WriteAheadLog(self.path, fh, fsync=self.fsync)
 
     def close(self) -> None:
         if self._fh is not None:
@@ -127,12 +183,17 @@ class WriteAheadLog:
         while pos + _REC.size <= len(data):
             crc, nbytes, op = _REC.unpack_from(data, pos)
             end = pos + _REC.size + nbytes
-            if op not in _OPS or nbytes % 8 or end > len(data):
+            if op not in _ALL_OPS or nbytes % 8 or end > len(data):
                 break
             payload = data[pos + _REC.size:end]
             if zlib.crc32(bytes([op]) + payload) != crc:
                 break
-            records.append((op, np.frombuffer(payload, dtype="<u8")
-                            .astype(np.uint64)))
+            if op == OP_CHECKPOINT:
+                # everything before the checkpoint is compacted history;
+                # the records that follow rebuild the state from scratch
+                records = []
+            else:
+                records.append((op, np.frombuffer(payload, dtype="<u8")
+                                .astype(np.uint64)))
             pos = end
         return records, pos, len(data) - pos

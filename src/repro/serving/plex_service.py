@@ -53,6 +53,21 @@ One serving front-end over the snapshot + delta ownership model:
   epoch, so ``stats.cache_hit_rate`` is the current snapshot's number.
   Results are bit-identical with the cache on or off.
 
+* **Mesh distribution (opt-in).** ``plan=`` takes the service multi-device:
+  an int spans that many mesh ``data``-axis devices (a ``PlacementPlan``
+  pins the assignment explicitly). The snapshot's shards are bin-packed
+  onto devices from build statics (``distrib.placement``), each device
+  holds only its shard-contiguous plane slab (``distrib.partition``), and
+  lookups run the **collective-free routed path**
+  (``distrib.routed_lookup``): host-side device binning, the existing
+  per-device stacked merged pipeline (global row offsets, so devices emit
+  final indices), host-side re-permutation — zero cross-device
+  communication inside any compiled dispatch, still one dispatch per
+  micro-batch per device. A merge re-plans the *new* snapshot and swaps
+  plan + partitions + delta replicas together with it. A 1-device plan is
+  bit-identical to the legacy path; a plan that fails per-device
+  unification falls back to it.
+
 * **Durability (opt-in).** ``save(dir)`` persists the current snapshot as
   a numbered generation (``persist.format``), seeds a fresh WAL segment
   with the live delta, and atomically publishes the generation manifest —
@@ -96,6 +111,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..core.index import BACKENDS, SHARD_MAX_KEYS, LearnedIndex, Snapshot
+from ..distrib.partition import partition_stacked
+from ..distrib.placement import PlacementPlan, plan_matches, plan_placement
+from ..distrib.routed_lookup import RoutedStackedLookup
 from ..kernels.jnp_lookup import PROBE_MODES
 from ..kernels.pairs import split_u64
 from ..kernels.planes import finalize_indices
@@ -106,8 +124,9 @@ from ..persist.manifest import (Manifest, gen_name, read_manifest, wal_name,
 from ..persist.wal import OP_DELETE, OP_INSERT, WriteAheadLog
 from .delta import DELTA_CAP_MIN, DeltaBuffer, next_pow2
 
-__all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD", "LookupTicket",
-           "PlexService", "ServiceStats", "SHARD_MAX_KEYS", "service_mesh"]
+__all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD",
+           "DEFAULT_WAL_ROTATE_BYTES", "LookupTicket", "PlexService",
+           "ServiceStats", "SHARD_MAX_KEYS", "service_mesh"]
 
 log = logging.getLogger("repro.persist")
 
@@ -123,6 +142,11 @@ DEFAULT_BLOCK = 4096
 # delta entries that trigger a snapshot rebuild + swap. Sized so the merged
 # pipeline's extra bisect depth stays ~log2(4096) = 12 gather rounds.
 DEFAULT_MERGE_THRESHOLD = 4096
+
+# WAL bytes that trigger an in-place compaction (checkpoint + pending ops):
+# recovery replay stays bounded by the *delta* size regardless of how much
+# insert/delete churn an epoch appends. 0 disables rotation.
+DEFAULT_WAL_ROTATE_BYTES = 4 << 20
 
 
 @dataclasses.dataclass
@@ -142,6 +166,7 @@ class ServiceStats:
     deletes: int = 0              # logical occurrences removed
     merges: int = 0
     merge_s: float = 0.0          # snapshot rebuild time (build, not serve)
+    wal_rotations: int = 0        # durable-WAL compactions (bounded replay)
 
     def note(self, n_queries: int, n_batches: int, n_padded: int) -> None:
         self.queries += n_queries
@@ -195,11 +220,14 @@ class LookupTicket:
 
 @dataclasses.dataclass(frozen=True)
 class _ServiceState:
-    """The atomically-swapped (snapshot, delta) pair. One reference
-    assignment publishes both together, so a reader can never pair a new
-    snapshot with the previous epoch's delta (or vice versa)."""
+    """The atomically-swapped (snapshot, delta, router) triple. One
+    reference assignment publishes all of it together, so a reader can
+    never pair a new snapshot with the previous epoch's delta — or a
+    routed mesh partition with a snapshot it wasn't cut from. ``router``
+    is ``None`` unless the service was built with a placement plan."""
     snapshot: Snapshot
     delta: DeltaBuffer
+    router: RoutedStackedLookup | None = None
 
 
 @dataclasses.dataclass
@@ -267,6 +295,8 @@ class PlexService:
                  probe: str | None = None, cache_slots: int = 0,
                  max_delay_s: float = 0.002,
                  merge_threshold: int = DEFAULT_MERGE_THRESHOLD,
+                 plan: PlacementPlan | int | None = None,
+                 wal_rotate_bytes: int = DEFAULT_WAL_ROTATE_BYTES,
                  _snapshot: Snapshot | None = None,
                  **build_kw):
         if backend not in BACKENDS:
@@ -300,6 +330,17 @@ class PlexService:
         self._n_shards_req = n_shards
         self._build_kw = build_kw
         self._devices = list(self.mesh.devices.flat)
+        self.wal_rotate_bytes = int(wal_rotate_bytes)
+        # mesh placement request: int = span that many data-axis devices,
+        # PlacementPlan = pin the initial assignment (re-planned at merges)
+        if isinstance(plan, int):
+            if not 1 <= plan <= len(self._devices):
+                raise ValueError(f"plan={plan} devices requested but the "
+                                 f"mesh has {len(self._devices)}")
+        elif plan is not None and not isinstance(plan, PlacementPlan):
+            raise ValueError("plan must be an int device count or a "
+                             "PlacementPlan")
+        self._plan_req = plan
 
         # fixed delta capacity: the merge threshold bounds the buffer, so
         # sizing the device view to it up front means the merged pipeline
@@ -311,7 +352,8 @@ class PlexService:
             keys, eps, n_shards=n_shards, backend=backend,
             block=self.block, devices=self._devices, **build_kw)
         self._state = _ServiceState(
-            snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+            snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity),
+            self._make_router(snap))
         # durable-mode attachment (None = in-memory only); load_s is the
         # wall time PlexService.open spent mapping + replaying
         self._dur: _DurableState | None = None
@@ -395,6 +437,58 @@ class PlexService:
         if state.delta.empty:
             return state.snapshot.keys
         return state.delta.logical_keys()
+
+    # -- routed mesh path (distrib) -----------------------------------------
+    @property
+    def plan(self) -> PlacementPlan | None:
+        """The active placement plan (``None`` when serving single-device
+        or the plan path fell back to the legacy pipeline)."""
+        router = self._state.router
+        return router.plan if router is not None else None
+
+    def _make_router(self, snap: Snapshot) -> RoutedStackedLookup | None:
+        """Build the routed mesh path for ``snap`` from the placement
+        request, or ``None`` when no plan was requested / a device's shard
+        subset failed unification (legacy fallback). A user-pinned
+        ``PlacementPlan`` is honoured only while it matches ``snap``'s
+        exact shard table (``plan_matches`` — count AND offsets AND
+        boundary keys: a merge shifts offsets/minima even at an unchanged
+        shard count, and routing with stale boundaries would silently
+        misbin queries); otherwise the plan is re-derived for the same
+        device span (placement is snapshot-scoped state, exactly like the
+        stacked planes)."""
+        req = self._plan_req
+        if req is None or self.default_backend != "jnp":
+            return None
+        if isinstance(req, PlacementPlan) and plan_matches(
+                req, snap.offsets, snap.keys.size, snap.shard_min):
+            plan = req
+        else:
+            n_dev = req.n_devices if isinstance(req, PlacementPlan) else req
+            plan = plan_placement(snap, min(int(n_dev), len(self._devices)))
+        parts = partition_stacked(snap, plan, self._devices,
+                                  block=self.block, probe=self.probe,
+                                  cache_slots=self.cache_slots)
+        if parts is None:
+            return None
+        return RoutedStackedLookup(plan, parts, self.block)
+
+    def _routed_lookup(self, state: _ServiceState, q: np.ndarray
+                       ) -> np.ndarray:
+        """Whole-batch routed mesh (merged) lookup: host device binning,
+        eager per-device micro-batch dispatch, one sync, host
+        re-permutation. Stats accounting mirrors the stacked path."""
+        epoch = self.stats.epoch
+        batch = state.router.dispatch(q, self._delta_view(state))
+        self.stats.inflight_batches += batch.n_batches
+        if self.cache_slots:
+            self.stats.cache_queries += q.size
+        self.stats.note(q.size, batch.n_batches, batch.padded_lanes)
+        out = batch.assemble(q.size)       # the one sync point
+        for res in batch.lane_results():
+            self._note_synced(res, epoch)
+        self.stats.note_drained(batch.n_batches)
+        return out
 
     # -- stacked single-dispatch path ---------------------------------------
     def stacked_impl(self, state: _ServiceState | None = None):
@@ -555,6 +649,8 @@ class PlexService:
             return np.zeros(0, dtype=np.int64)
         state = self._state       # one consistent (snapshot, delta) capture
         if backend == "jnp":
+            if state.router is not None:
+                return self._routed_lookup(state, q)
             st = self.stacked_impl(state)
             if st is not None:
                 return self._stacked_lookup(st, q, state)
@@ -594,6 +690,7 @@ class PlexService:
                 self._dur.wal.append(OP_INSERT, keys)
             n = state.delta.insert(keys)
             self.stats.inserts += n
+            self._maybe_rotate_wal(state)
             self._after_update(state)
             return n
 
@@ -611,8 +708,32 @@ class PlexService:
                 self._dur.wal.append(OP_DELETE, keys)
             n = state.delta.delete(keys)
             self.stats.deletes += n
+            self._maybe_rotate_wal(state)
             self._after_update(state)
             return n
+
+    def _maybe_rotate_wal(self, state: _ServiceState) -> None:
+        """Compact the durable WAL once it exceeds ``wal_rotate_bytes``
+        (lock held; called after the delta mutation, so the seed ops
+        include the record just logged). Recovery replay is thereafter
+        bounded by the live delta, not by the epoch's append history.
+
+        Rotation is skipped when the compacted seed would not shrink the
+        segment to at most half its size — a delta whose own encoding is
+        near the threshold (huge manual-merge buffers) would otherwise be
+        rewritten in full on *every* mutation, turning O(record) appends
+        into O(delta) rewrites."""
+        dur = self._dur
+        if dur is None or not 0 < self.wal_rotate_bytes <= dur.wal.size_bytes:
+            return
+        delta = state.delta
+        seed_est = 9 * 3 + 8 * (delta.n_inserts + delta.n_tombstones)
+        if seed_est * 2 > dur.wal.size_bytes:
+            return
+        ops = [(_WAL_OPS[name], op_keys)
+               for name, op_keys in delta.pending_ops()]
+        dur.wal = dur.wal.rotate(ops)
+        self.stats.wal_rotations += 1
 
     def _after_update(self, state: _ServiceState) -> None:
         # no cache invalidation needed: cached entries hold delta-
@@ -649,8 +770,14 @@ class PlexService:
             # pre-warm the new snapshot's device pipelines while the old
             # one still serves (only when the jnp path is actually in use),
             # so the first post-swap lookup never pays a cold compile —
-            # warm time is merge/build work, not serving work
-            if state.snapshot.built_stacked() is not None:
+            # warm time is merge/build work, not serving work. The routed
+            # mesh path re-plans + re-partitions the NEW snapshot here
+            # (placement is snapshot-scoped), warming every device slab.
+            new_router = self._make_router(snap)
+            if new_router is not None:
+                new_router.warmup(np.uint64(snap.keys[0]),
+                                  self._delta_capacity)
+            elif state.snapshot.built_stacked() is not None:
                 self._warm_stacked(snap, self._delta_capacity)
             # durable mode: commit the new generation (snapshot + fresh WAL
             # + manifest rename) BEFORE the in-memory swap — a crash in
@@ -663,9 +790,10 @@ class PlexService:
                     self._dur.root, self._dur.generation + 1, snap, (),
                     self._dur.fsync)
             # the atomic swap: one reference assignment publishes the new
-            # (snapshot, delta) pair
+            # (snapshot, delta, router) triple
             self._state = _ServiceState(
-                snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity))
+                snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity),
+                new_router)
             if new_dur is not None:
                 self._swap_durable(new_dur)
             self.stats.merges += 1
@@ -751,6 +879,15 @@ class PlexService:
             if p.name != man.wal:
                 log.warning("open(%s): discarding stray WAL segment %s",
                             root, p.name)
+        for p in sorted(root.glob("wal-*.log.rot")):
+            # a crash between rotate()'s temp write and its rename leaves
+            # this; the live segment is authoritative, the temp is garbage
+            log.warning("open(%s): removing leftover rotation temp %s",
+                        root, p.name)
+            try:
+                p.unlink()
+            except OSError:  # pragma: no cover
+                pass
         snap = load_snapshot(root / man.snapshot, verify=verify)
         svc = cls(None, backend=backend, _snapshot=snap, **kw)
         wal_path = root / man.wal
@@ -828,9 +965,12 @@ class PlexService:
         with self._lock:
             # capture the stacked path under the lock: mutations hold the
             # same lock, so the queued dispatch can never pair this
-            # snapshot's planes with a different epoch's delta
-            st = (self.stacked_impl() if self.default_backend == "jnp"
-                  else None)
+            # snapshot's planes with a different epoch's delta. The routed
+            # mesh path fills tickets synchronously (its host binning is
+            # per-batch; queue formation stays a single-device feature)
+            st = (self.stacked_impl()
+                  if self.default_backend == "jnp"
+                  and self._state.router is None else None)
             if st is None:
                 ticket._out[:] = self.lookup(q)
                 ticket._filled = q.size
@@ -978,6 +1118,9 @@ class PlexService:
             state = self._state
             dv = self._delta_view(state)
             cap = dv.cap if dv is not None else self._delta_capacity
+            if state.router is not None:
+                state.router.warmup(np.uint64(state.snapshot.keys[0]), cap)
+                return
             if self._warm_stacked(state.snapshot, cap):
                 return
         for shard in self.shards:

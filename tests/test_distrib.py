@@ -1,0 +1,435 @@
+"""Distribution subsystem: placement planning, per-device partitioned
+planes, collective-free routed lookups, partial snapshot loads, and the
+PlexService plan= path.
+
+Runs on any device count: the CI multi-device leg forces 8 host CPU
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) for real
+placement; on a 1-device host the router tests use *virtual* devices
+(the same physical device repeated), which exercises every line of the
+routing/partition/assembly logic — placement addressing is per-partition,
+not global."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import BACKENDS, LearnedIndex, Snapshot
+from repro.distrib import (PlacementPlan, RoutedStackedLookup, open_routed,
+                           partition_contiguous, partition_stacked,
+                           plan_from_dir, plan_placement, shard_hotness,
+                           shard_weights)
+from repro.persist import load_snapshot, save_snapshot
+from repro.serving import PlexService
+
+from conftest import sorted_u64
+
+BLOCK = 512
+
+# collective HLO ops that must never appear in a routed dispatch
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all",
+                "collective-permute", "reduce-scatter",
+                "collective-broadcast")
+
+
+def _devices(n: int) -> list:
+    """n placement targets; cycles the physical devices so router logic is
+    testable on a 1-device host (the multi-device CI leg provides 8)."""
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n)]
+
+
+def _skewed_snapshot(rng, sizes, eps=32):
+    """Snapshot with explicitly skewed shard sizes (Snapshot.build splits
+    evenly, so skew needs hand-built shards)."""
+    keys = sorted_u64(rng, int(sum(sizes)))
+    offs = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    ends = list(offs[1:]) + [keys.size]
+    shards = [LearnedIndex.build(keys[o:e], eps) for o, e in zip(offs, ends)]
+    return Snapshot(keys, eps, offs, shards), keys
+
+
+def _router_for(snap, n_dev, *, cache_slots=0, hotness=None):
+    plan = plan_placement(snap, n_dev, hotness=hotness)
+    parts = partition_stacked(snap, plan, _devices(plan.n_devices),
+                              block=BLOCK, cache_slots=cache_slots)
+    assert parts is not None
+    return RoutedStackedLookup(plan, parts, BLOCK)
+
+
+def _svc_plan(n: int) -> int:
+    """Largest service plan the real mesh supports (the service validates
+    against physical devices; the multi-device leg gets the full span)."""
+    return min(n, len(jax.devices()))
+
+
+# ------------------------------------------------------------ placement ----
+
+def test_partition_contiguous_optimal_and_surplus():
+    # known optimum: [5,1,1,1,1,5] into 3 parts -> max part sum 5
+    b = partition_contiguous(np.asarray([5., 1, 1, 1, 1, 5]), 3)
+    sums = [np.sum([5., 1, 1, 1, 1, 5][b[i]:b[i + 1]]) for i in range(3)]
+    assert max(sums) == 5
+    # more parts than weights: one each, the rest empty
+    b = partition_contiguous(np.asarray([3., 2]), 4)
+    assert list(b) == [0, 1, 2, 2, 2]
+
+
+def test_plan_skewed_shards_balance(rng):
+    """One giant shard must not drag its neighbours onto the same device."""
+    snap, _ = _skewed_snapshot(rng, [40_000, 2_000, 2_000, 2_000, 2_000])
+    plan = plan_placement(snap, 2)
+    w = shard_weights(snap)
+    assert plan.shard_range(0) == (0, 1)          # the giant shard alone
+    assert plan.shard_range(1) == (1, 5)
+    assert plan.weights[0] == pytest.approx(w[0])
+    # device routing == two-level (shard -> owning device) routing
+    q = sorted_u64(rng, 3_000)
+    sid = snap.route(q)
+    shard_dev = np.searchsorted(plan.shard_start[1:-1], sid, side="right")
+    assert np.array_equal(plan.device_of(q), shard_dev)
+
+
+def test_plan_more_devices_than_shards(rng):
+    snap, keys = _skewed_snapshot(rng, [5_000, 5_000, 5_000])
+    plan = plan_placement(snap, 8)
+    assert plan.n_devices == 8 and plan.n_active == 3
+    # surplus devices are empty and never routed to
+    for d in range(plan.n_devices):
+        lo, hi = plan.shard_range(d)
+        assert (hi > lo) == (d in plan.active)
+    q = np.concatenate([keys, np.asarray([0, ~np.uint64(0)], np.uint64)])
+    assert np.isin(plan.device_of(q), plan.active).all()
+
+
+def test_plan_hotness_skews_placement(rng):
+    """A hot shard earns its own device even when key counts are even."""
+    snap, _ = _skewed_snapshot(rng, [8_000] * 4)
+    hot = np.asarray([100.0, 1.0, 1.0, 1.0])
+    plan = plan_placement(snap, 2, hotness=hot)
+    assert plan.shard_range(0) == (0, 1)
+    # and shard_hotness feeds it from a routed sample stream
+    sample = snap.keys[rng.integers(0, 8_000, 5_000)]   # all shard-0 keys
+    h = shard_hotness(snap, sample)
+    assert h.argmax() == 0 and h[0] == 5_000
+
+
+def test_plan_single_device_is_trivial(rng):
+    snap, keys = _skewed_snapshot(rng, [6_000, 6_000])
+    plan = plan_placement(snap, 1)
+    assert plan.shard_range(0) == (0, 2)
+    assert plan.key_range(0) == (0, keys.size)
+    assert np.array_equal(plan.device_of(keys[:100]), np.zeros(100))
+
+
+def test_plan_row_slice_byte_math(rng):
+    snap, _ = _skewed_snapshot(rng, [4_000, 4_000, 4_000])
+    plan = plan_placement(snap, 3)
+    row_len = 1024
+    assert plan.row_slice(1, row_len) == slice(1 * row_len, 2 * row_len)
+
+
+# ------------------------------------------- partition + routed lookup ----
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4, 8])
+def test_routed_parity_present_and_absent(n_dev, rng):
+    """Acceptance: routed mesh lookups == np.searchsorted over the key
+    array for any plan width, present and absent keys (unique keys, so
+    windows are conclusive)."""
+    keys = np.unique(sorted_u64(rng, 60_000))
+    snap = Snapshot.build(keys.copy(), 32, n_shards=6)
+    router = _router_for(snap, n_dev)
+    q = np.concatenate([
+        keys[rng.integers(0, keys.size, 3_000)],
+        rng.integers(0, 1 << 62, 3_000, dtype=np.uint64),
+        np.asarray([0, keys[0], keys[-1], ~np.uint64(0)], np.uint64),
+    ])
+    out, batch = router.lookup(q)
+    assert np.array_equal(out, np.searchsorted(keys, q, "left"))
+    assert batch.n_batches >= router.n_active or q.size < BLOCK
+
+
+def test_routed_merged_delta_parity(rng):
+    """The per-device merged fold (replicated delta planes) equals
+    searchsorted over the logical snapshot+delta key array."""
+    from repro.serving.delta import DeltaBuffer
+    keys = np.unique(sorted_u64(rng, 40_000))
+    snap = Snapshot.build(keys.copy(), 32, n_shards=4)
+    router = _router_for(snap, 4)
+    delta = DeltaBuffer(snap.keys)
+    ins = rng.integers(0, 1 << 62, 300, dtype=np.uint64)
+    dels = np.unique(keys[rng.integers(0, keys.size, 200)])
+    delta.insert(ins)
+    delta.delete(dels)
+    logical = delta.logical_keys()
+    q = np.concatenate([logical[rng.integers(0, logical.size, 3_000)],
+                        rng.integers(0, 1 << 62, 1_000, dtype=np.uint64)])
+    out, _ = router.lookup(q, delta.device_view())
+    assert np.array_equal(out, np.searchsorted(logical, q, "left"))
+    # empty-delta dispatch still matches (delta-free pipeline)
+    out2, _ = router.lookup(q)
+    assert np.array_equal(out2, np.searchsorted(keys, q, "left"))
+
+
+def test_zero_collectives_in_compiled_dispatch(rng):
+    """Acceptance: the compiled per-device lookup (delta-free AND merged)
+    contains no cross-device collective ops — routing is entirely
+    host-side, each dispatch touches one device's slab only."""
+    from repro.kernels.pairs import split_u64
+    from repro.kernels.planes import build_delta_planes, move_delta_planes
+    keys = np.unique(sorted_u64(rng, 30_000))
+    snap = Snapshot.build(keys.copy(), 32, n_shards=4)
+    router = _router_for(snap, 2)
+    dummy = build_delta_planes(keys[:1], np.ones(1, np.int64), 128)
+    for d in router.plan.active:
+        part = router.parts[d]
+        qh, ql = split_u64(np.repeat(keys[:1], BLOCK))
+        qhi = jax.device_put(qh, part.sharding)
+        qlo = jax.device_put(ql, part.sharding)
+        dp = move_delta_planes(dummy, part.sharding)
+        for fn, args in ((part.impl._fn, (qhi, qlo)),
+                         (part.impl._merged_fn(dp.cap),
+                          (qhi, qlo, dp.khi, dp.klo, dp.cum0))):
+            hlo = fn.lower(*args).compile().as_text()
+            for coll in _COLLECTIVES:
+                assert coll not in hlo, (d, coll)
+
+
+def test_one_dispatch_per_microbatch_per_device(rng):
+    """Acceptance: the routed path issues exactly one jit dispatch per
+    micro-batch per device — no per-shard loops, no second merged pass."""
+    keys = np.unique(sorted_u64(rng, 40_000))
+    snap = Snapshot.build(keys.copy(), 32, n_shards=4)
+    router = _router_for(snap, 2)
+    calls = {}
+    for d in router.plan.active:
+        impl = router.parts[d].impl
+        orig = impl._fn
+        impl._fn = (lambda *a, _d=int(d), _o=orig:
+                    (calls.setdefault(_d, []).append(1), _o(*a))[1])
+    q = keys[rng.integers(0, keys.size, 3 * BLOCK + 100)]
+    out, batch = router.lookup(q)
+    assert np.array_equal(out, np.searchsorted(keys, q, "left"))
+    dev = router.plan.device_of(q)
+    want_batches = sum(-(-int(np.sum(dev == d)) // BLOCK)
+                       for d in router.plan.active if np.any(dev == d))
+    assert sum(len(v) for v in calls.values()) == want_batches
+    assert batch.n_batches == want_batches
+
+
+def test_partition_unification_is_per_device(rng):
+    """Shards that cannot unify globally may still partition into
+    per-device unifiable slabs; a plan that splits the conflict serves."""
+    import dataclasses
+    from repro.core.cht import build_cht
+    from repro.core.plex import build_plex
+    keys = sorted_u64(rng, 20_000)
+    offs = np.asarray([0, 10_000], dtype=np.int64)
+    plexes = [build_plex(keys[:10_000], 32), build_plex(keys[10_000:], 32)]
+    # force one CHT shard: mixed kinds fail the global unification gate
+    cht = dataclasses.replace(
+        plexes[1], layer=build_cht(plexes[1].spline.keys, 4, 16))
+    shards = [LearnedIndex(plex=plexes[0]), LearnedIndex(plex=cht)]
+    snap = Snapshot(keys, 32, offs, shards)
+    assert snap.stacked_impl(block=BLOCK) is None     # global gate trips
+    plan = plan_placement(snap, 2)
+    parts = partition_stacked(snap, plan, _devices(2), block=BLOCK)
+    assert parts is not None                          # per-device succeeds
+    router = RoutedStackedLookup(plan, parts, BLOCK)
+    q = keys[rng.integers(0, keys.size, 2_000)]
+    out, _ = router.lookup(q)
+    assert np.array_equal(out, np.searchsorted(keys, q, "left"))
+
+
+# ------------------------------------------------- PlexService plan path ----
+
+def test_service_plan_parity_all_backends(rng):
+    """Empty-delta and live-delta lookups through a planned service equal
+    searchsorted over the logical key array on every backend."""
+    keys = np.unique(sorted_u64(rng, 40_000))
+    svc = PlexService(keys.copy(), eps=32, n_shards=4, block=BLOCK,
+                      plan=_svc_plan(4), merge_threshold=0)
+    assert svc.plan is not None
+    q = np.concatenate([keys[rng.integers(0, keys.size, 2_000)],
+                        rng.integers(0, 1 << 62, 500, dtype=np.uint64)])
+    want = np.searchsorted(keys, q, "left")
+    for backend in BACKENDS:
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+    ins = rng.integers(0, 1 << 62, 400, dtype=np.uint64)
+    dels = np.unique(keys[rng.integers(0, keys.size, 300)])
+    svc.insert(ins)
+    svc.delete(dels)
+    logical = svc.logical_keys()
+    want = np.searchsorted(logical, q, "left")
+    for backend in BACKENDS:
+        assert np.array_equal(svc.lookup(q, backend=backend), want), backend
+
+
+def test_service_single_device_plan_bit_identical(rng):
+    """Acceptance: a 1-device plan reproduces the legacy path bit-for-bit,
+    absent keys and duplicate runs included."""
+    keys = sorted_u64(rng, 50_000, dups=True)
+    planned = PlexService(keys.copy(), eps=32, n_shards=4, block=BLOCK,
+                          plan=1)
+    legacy = PlexService(keys.copy(), eps=32, n_shards=4, block=BLOCK)
+    assert planned.plan is not None and planned.plan.n_devices == 1
+    q = np.concatenate([keys[rng.integers(0, keys.size, 4_000)],
+                        rng.integers(0, 1 << 62, 4_000, dtype=np.uint64),
+                        np.asarray([0, ~np.uint64(0)], np.uint64)])
+    a = planned.lookup(q, backend="jnp")
+    b = legacy.lookup(q, backend="jnp")
+    assert np.array_equal(a, b)
+
+
+def test_service_plan_more_devices_than_shards(rng):
+    keys = np.unique(sorted_u64(rng, 20_000))
+    n_dev = _svc_plan(8)
+    svc = PlexService(keys.copy(), eps=32, n_shards=2, block=BLOCK,
+                      plan=n_dev)
+    if svc.plan is not None and n_dev > 2:
+        assert svc.plan.n_active <= 2
+    q = keys[rng.integers(0, keys.size, 2_000)]
+    assert np.array_equal(svc.lookup(q, backend="jnp"),
+                          np.searchsorted(keys, q, "left"))
+
+
+def test_service_merge_replans(rng):
+    """A threshold merge rebuilds the snapshot AND re-plans the mesh; the
+    swapped state serves the merged logical array through the new plan."""
+    keys = np.unique(sorted_u64(rng, 30_000))
+    svc = PlexService(keys.copy(), eps=32, n_shards=3, block=BLOCK,
+                      plan=_svc_plan(2), merge_threshold=256)
+    plan0 = svc.plan
+    ins = rng.integers(0, 1 << 62, 300, dtype=np.uint64)   # trips threshold
+    svc.insert(ins)
+    assert svc.stats.merges == 1 and svc.n_pending == 0
+    assert svc.plan is not None and svc.plan is not plan0
+    logical = svc.keys
+    q = np.concatenate([ins, keys[rng.integers(0, keys.size, 2_000)]])
+    assert np.array_equal(svc.lookup(q, backend="jnp"),
+                          np.searchsorted(logical, q, "left"))
+
+
+def test_pinned_plan_rebound_after_merge(rng):
+    """A user-pinned plan is honoured only while it matches the exact
+    shard table it was cut from; a merge (shifted offsets/minima, same
+    shard count) must re-plan instead of routing with stale boundaries."""
+    keys = np.unique(sorted_u64(rng, 30_000))
+    base = PlexService(keys.copy(), eps=32, n_shards=3, block=BLOCK)
+    pinned = plan_placement(base._state.snapshot, _svc_plan(2))
+    svc = PlexService(keys.copy(), eps=32, n_shards=3, block=BLOCK,
+                      plan=pinned, merge_threshold=0)
+    if svc.plan is not None:
+        assert svc.plan is pinned            # identical build -> honoured
+    ins = rng.integers(0, 1 << 62, 500, dtype=np.uint64)
+    svc.insert(ins)
+    svc.merge()                              # same shard count, new table
+    assert svc.plan is not pinned
+    logical = svc.keys
+    q = np.concatenate([ins, keys[rng.integers(0, keys.size, 2_000)]])
+    assert np.array_equal(svc.lookup(q, backend="jnp"),
+                          np.searchsorted(logical, q, "left"))
+
+
+def test_stale_plan_rejected_by_partition_and_loader(rng, tmp_path):
+    """partition_stacked / open_routed bind-check the plan against the
+    actual shard table, not just the shard count."""
+    keys = np.unique(sorted_u64(rng, 20_000))
+    snap_a = Snapshot.build(keys.copy(), 32, n_shards=2)
+    other = np.unique(sorted_u64(np.random.default_rng(99), 20_000))
+    snap_b = Snapshot.build(other.copy(), 32, n_shards=2)
+    plan_b = plan_placement(snap_b, 2)       # same count, different table
+    with pytest.raises(ValueError, match="does not match"):
+        partition_stacked(snap_a, plan_b, _devices(2), block=BLOCK)
+    save_snapshot(tmp_path / "g0", snap_a, fsync=False)
+    with pytest.raises(ValueError, match="does not match"):
+        open_routed(tmp_path / "g0", plan_b, _devices(2), block=BLOCK)
+
+
+def test_service_plan_validation(rng):
+    keys = sorted_u64(rng, 5_000)
+    with pytest.raises(ValueError, match="plan"):
+        PlexService(keys.copy(), eps=32, plan=0)
+    with pytest.raises(ValueError, match="plan"):
+        PlexService(keys.copy(), eps=32, plan=len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="plan"):
+        PlexService(keys.copy(), eps=32, plan="everywhere")
+
+
+def test_service_plan_stats_accounting(rng):
+    keys = np.unique(sorted_u64(rng, 30_000))
+    svc = PlexService(keys.copy(), eps=32, n_shards=4, block=BLOCK,
+                      plan=_svc_plan(4))
+    q = keys[rng.integers(0, keys.size, 2 * BLOCK + 77)]
+    svc.lookup(q, backend="jnp")
+    assert svc.stats.queries == q.size
+    assert svc.stats.inflight_batches == 0
+    assert svc.stats.drained_batches == svc.stats.batches >= 1
+    # ticket path fills synchronously through the routed pipeline
+    t = svc.submit(q[:100])
+    assert t.ready
+    assert np.array_equal(t.result(),
+                          np.searchsorted(keys, q[:100], "left"))
+
+
+# ------------------------------------------------- partial snapshot load ----
+
+def test_partial_load_maps_strictly_fewer_bytes(rng, tmp_path):
+    """Acceptance: a shard_range load maps strictly fewer bytes than a
+    full load, and its local view matches the global arrays."""
+    keys = sorted_u64(rng, 40_000)
+    snap = Snapshot.build(keys.copy(), 32, n_shards=4)
+    save_snapshot(tmp_path / "g0", snap, fsync=False)
+    full = load_snapshot(tmp_path / "g0")
+    assert full.mapped_bytes > 0
+    part = load_snapshot(tmp_path / "g0", shard_range=(1, 3), verify=True)
+    assert 0 < part.mapped_bytes < full.mapped_bytes
+    lo = int(full.offsets[1])
+    hi = int(full.offsets[3])
+    assert part.key_base == lo and part.shard_base == 1
+    assert np.array_equal(np.asarray(part.keys), keys[lo:hi])
+    assert np.array_equal(part.offsets + part.key_base, full.offsets[1:3])
+    assert part.n_shards == 2
+    # every per-device range of an 8-way plan also maps fewer bytes
+    plan = plan_from_dir(tmp_path / "g0", 8)
+    for d in plan.active:
+        p = load_snapshot(tmp_path / "g0", shard_range=plan.shard_range(d))
+        assert p.mapped_bytes < full.mapped_bytes
+
+
+def test_partial_load_shard_range_validation(rng, tmp_path):
+    keys = sorted_u64(rng, 10_000)
+    snap = Snapshot.build(keys.copy(), 32, n_shards=2)
+    save_snapshot(tmp_path / "g0", snap, fsync=False)
+    for bad in ((2, 1), (-1, 1), (0, 3)):
+        with pytest.raises(ValueError):
+            load_snapshot(tmp_path / "g0", shard_range=bad)
+
+
+def test_plan_from_dir_matches_in_memory_plan(rng, tmp_path):
+    keys = sorted_u64(rng, 40_000)
+    snap = Snapshot.build(keys.copy(), 32, n_shards=5)
+    save_snapshot(tmp_path / "g0", snap, fsync=False)
+    from_disk = plan_from_dir(tmp_path / "g0", 3)
+    from_mem = plan_placement(load_snapshot(tmp_path / "g0"), 3)
+    assert np.array_equal(from_disk.shard_start, from_mem.shard_start)
+    assert np.array_equal(from_disk.key_start, from_mem.key_start)
+    assert np.array_equal(from_disk.bound_keys, from_mem.bound_keys)
+
+
+def test_open_routed_partial_serves(rng, tmp_path):
+    """The full partial-load wiring: plan from header -> per-device
+    partial loads -> routed serving, never mapping a full snapshot."""
+    keys = np.unique(sorted_u64(rng, 50_000))
+    snap = Snapshot.build(keys.copy(), 32, n_shards=4)
+    save_snapshot(tmp_path / "g0", snap, fsync=False)
+    full_bytes = load_snapshot(tmp_path / "g0").mapped_bytes
+    plan = plan_from_dir(tmp_path / "g0", 4)
+    router, snaps, mapped = open_routed(
+        tmp_path / "g0", plan, _devices(plan.n_devices), block=BLOCK)
+    assert len(snaps) == plan.n_active
+    for s in snaps:                       # each device maps only its slice
+        assert s.mapped_bytes < full_bytes
+    q = np.concatenate([keys[rng.integers(0, keys.size, 3_000)],
+                        rng.integers(0, 1 << 62, 1_000, dtype=np.uint64)])
+    out, _ = router.lookup(q)
+    assert np.array_equal(out, np.searchsorted(keys, q, "left"))

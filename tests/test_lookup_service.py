@@ -136,12 +136,16 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert any(r.startswith("serve,tiny,") for r in rows)
     records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
     # one uniform record per backend + zipf + update_mix + cold_vs_warm
-    assert len(records) == len(BACKENDS) + 3
+    # + one mesh_scale record per plan span the host's devices allow
+    import jax
+    n_mesh = sum(1 for n in sb.MESH_SCALE_DEVS if n <= len(jax.devices()))
+    assert len(records) == len(BACKENDS) + 3 + n_mesh
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
     extra = {"zipf": {"cache_hit_rate"},
              "update_mix": {"write_frac", "merges"},
-             "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"}}
+             "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"},
+             "mesh_scale": {"n_devices", "n_active"}}
     for rec in records:
         assert set(rec) == base | extra.get(rec["workload"], set())
         assert rec["ns_per_lookup"] > 0
@@ -157,5 +161,8 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert len(cw) == 1
     assert cw[0]["load_s"] > 0 and cw[0]["first_batch_s"] > 0
     assert cw[0]["warm_speedup"] > 0
+    ms = [r for r in records if r["workload"] == "mesh_scale"]
+    assert len(ms) == n_mesh and ms[0]["n_devices"] == 1
+    assert all(1 <= r["n_active"] <= r["n_devices"] for r in ms)
     # the persisted copy is reusable: a second run warm-starts from it
     assert (tmp_path / "bench-snapshots").is_dir()
