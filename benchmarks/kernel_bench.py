@@ -1,9 +1,13 @@
 """Batched device-lookup path benchmark (numpy core vs jit/Pallas pipeline).
 
 Pallas runs in interpret mode on CPU (correctness harness, not TPU timing),
-so this reports (a) the numpy reference throughput and (b) the pure-jnp
-jitted pipeline throughput, plus the kernel's window/config so the roofline
-discussion in EXPERIMENTS.md §Perf can reason about VMEM tiles."""
+so this reports (a) the numpy reference throughput, (b) the pure-jnp
+jitted pipeline throughput, plus the kernel's window/config so the
+roofline discussion in EXPERIMENTS.md §Perf can reason about VMEM tiles,
+and (c) the two *stacked* serving pipelines side by side — the jit'd jnp
+fused dispatch (``StackedJnpPlex``) against the fused Pallas kernel
+(``StackedPallasPlex``, one ``pallas_call`` per micro-batch) — verified
+bit-identical on the same query stream before timing."""
 from __future__ import annotations
 
 import time
@@ -11,27 +15,51 @@ import time
 import numpy as np
 
 from repro.core import build_plex
-from repro.kernels import DevicePlex
+from repro.kernels import DevicePlex, StackedJnpPlex, StackedPallasPlex
 
 from .common import datasets, queries
+
+# interpret-mode pallas re-walks the kernel per block; keep its timed
+# stream small (trend tracking only, like serve_bench.QUERY_CAPS)
+STACKED_QUERIES = 8_192
+
+
+def _time(fn, q) -> float:
+    t0 = time.perf_counter()
+    fn(q)
+    return (time.perf_counter() - t0) / q.size * 1e9
 
 
 def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
     rows.append("kernel,dataset,layer,mode,window,numpy_ns,device_ns")
+    stacked_rows = ["kernel_stacked,dataset,layer,probe,stacked_jnp_ns,"
+                    "stacked_pallas_ns"]
     for dname, keys in datasets(100_000).items():
         q = queries(keys, 32_768)
         px = build_plex(keys, eps=16)
         dp = DevicePlex.from_plex(px)
         dp.lookup(q[:dp.block])           # compile
-        t0 = time.perf_counter()
-        px.lookup(q)
-        np_ns = (time.perf_counter() - t0) / q.size * 1e9
-        t0 = time.perf_counter()
-        dp.lookup(q)
-        dev_ns = (time.perf_counter() - t0) / q.size * 1e9
+        np_ns = _time(px.lookup, q)
+        dev_ns = _time(dp.lookup, q)
         rows.append(f"kernel,{dname},{px.tuning.kind},{dp.static['mode']},"
                     f"{dp.window},{np_ns:.0f},{dev_ns:.0f}")
+        # fused stacked serving dispatch: jnp vs the one-pallas_call kernel
+        row_off = np.zeros(1, dtype=np.int64)
+        qs = q[:STACKED_QUERIES]
+        want = np.searchsorted(keys, qs, side="left")
+        ns = {}
+        for name, cls in (("jnp", StackedJnpPlex),
+                          ("pallas", StackedPallasPlex)):
+            st = cls.from_plexes([px], row_off)
+            got = st.lookup(qs)
+            assert np.array_equal(got, want), (dname, name,
+                                               "stacked lookup wrong")
+            ns[name] = _time(st.lookup, qs)
+        stacked_rows.append(f"kernel_stacked,{dname},{px.tuning.kind},"
+                            f"{st.probe},{ns['jnp']:.0f},"
+                            f"{ns['pallas']:.0f}")
+    rows.extend(stacked_rows)
     return rows
 
 

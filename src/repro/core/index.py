@@ -9,19 +9,22 @@ builds on:
     idx.lookup(q)                      # default backend
     idx.lookup(q, backend="jnp")       # explicit dispatch
 
-Backends:
+Backends resolve through the registry in ``kernels.backends`` (the single
+place backend names mean anything); the built-ins:
 
 * ``"numpy"``  — vectorised float64 host reference (``PLEX.lookup``).
 * ``"jnp"``    — jit-compiled pure-jnp pipeline, portable to CPU/GPU/TPU
-  (``kernels.jnp_lookup.JnpPlex``).
-* ``"pallas"`` — the Pallas kernel pipeline (``kernels.ops.DevicePlex``);
-  runs under interpret mode on CPU, compiled on TPU.
+  (``kernels.jnp_lookup.JnpPlex`` / ``StackedJnpPlex``).
+* ``"pallas"`` — the fused Pallas kernel pipeline
+  (``kernels.stacked_pallas.StackedPallasPlex``); runs under interpret
+  mode on CPU, compiled on TPU.
 
 All backends return the index of the first occurrence for present keys
 (identical across backends); for absent keys each returns the lower bound
 within its eps window, which may differ by the documented float32 slack at
 the extreme array edge. Accelerated backends are constructed lazily and
-cached, so a host-only user never imports jax kernels.
+cached, so a host-only user never imports jax kernels (the registry itself
+is jax-free).
 
 Snapshot (the updatable-index ownership model)
 ----------------------------------------------
@@ -40,13 +43,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Sequence
 
 import numpy as np
 
+from ..kernels.backends import BACKENDS, get_backend
 from .plex import PLEX, build_plex, freeze_arrays
-
-BACKENDS = ("numpy", "jnp", "pallas")
 
 # keep each shard's float32 rank plane well inside the 2^24 limit
 SHARD_MAX_KEYS = 1 << 23
@@ -57,14 +60,12 @@ class LearnedIndex:
     plex: PLEX
     default_backend: str = "numpy"
     block: int = 512
-    device: Any = None            # jax device for the jnp planes (optional)
-    _jnp: Any = dataclasses.field(default=None, repr=False)
-    _pallas: Any = dataclasses.field(default=None, repr=False)
+    device: Any = None            # jax device for the device planes (optional)
+    _impls: dict = dataclasses.field(default_factory=dict, repr=False)
+    _stacked_impls: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self) -> None:
-        if self.default_backend not in BACKENDS:
-            raise ValueError(f"unknown backend {self.default_backend!r}; "
-                             f"expected one of {BACKENDS}")
+        get_backend(self.default_backend)     # fail unknown names early
 
     @classmethod
     def build(cls, keys: np.ndarray, eps: int, *, backend: str = "numpy",
@@ -98,24 +99,40 @@ class LearnedIndex:
 
     # -- dispatch ------------------------------------------------------------
     def backend_impl(self, backend: str | None = None) -> Any:
-        """The (lazily constructed, cached) implementation for ``backend``."""
+        """The (lazily constructed, cached) implementation for ``backend``,
+        resolved through the ``kernels.backends`` registry. Host backends
+        serve straight from the underlying ``PLEX``."""
         backend = backend or self.default_backend
-        if backend == "numpy":
-            return self.plex
-        if backend == "jnp":
-            if self._jnp is None:
-                from ..kernels.jnp_lookup import JnpPlex
-                self._jnp = JnpPlex.from_plex(self.plex, block=self.block,
-                                              device=self.device)
-            return self._jnp
-        if backend == "pallas":
-            if self._pallas is None:
-                from ..kernels.ops import DevicePlex
-                self._pallas = DevicePlex.from_plex(self.plex,
-                                                    block=self.block)
-            return self._pallas
-        raise ValueError(f"unknown backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
+        spec = get_backend(backend)
+        impl = self._impls.get(backend)
+        if impl is None:
+            impl = (self.plex if spec.host else
+                    spec.index_factory(self.plex, block=self.block,
+                                       device=self.device))
+            self._impls[backend] = impl
+        return impl
+
+    def stacked_impl(self, backend: str | None = None, *,
+                     probe: str | None = None, cache_slots: int = 0) -> Any:
+        """The single-shard *stacked* impl for ``backend`` — the
+        ``lookup_planes(qhi, qlo, n_valid=None, delta=None) -> LaneResult``
+        contract the serving layer drives. Cached per configuration. A
+        single shard always unifies with itself, so this never returns
+        ``None``; host backends have no device path and raise."""
+        backend = backend or self.default_backend
+        spec = get_backend(backend)
+        if spec.stacked_factory is None:
+            raise ValueError(
+                f"backend {backend!r} has no stacked device path")
+        cfg = (backend, probe, cache_slots)
+        impl = self._stacked_impls.get(cfg)
+        if impl is None:
+            impl = spec.stacked_factory(
+                [self.plex], np.zeros(1, dtype=np.int64), block=self.block,
+                probe=probe, cache_slots=cache_slots,
+                sharding=self.device)
+            self._stacked_impls[cfg] = impl
+        return impl
 
     def warmup(self, backend: str | None = None) -> None:
         """Force construction + jit compilation (one block-sized lookup)."""
@@ -128,16 +145,22 @@ class LearnedIndex:
         return self.backend_impl(backend).lookup(q)
 
     def lookup_planes(self, qhi, qlo, backend: str | None = None):
-        """Async plane-level lookup for accelerated backends.
+        """Deprecated: use ``stacked_impl(backend).lookup_planes(...)``.
 
-        One block-shaped chunk of (hi, lo) uint32 query planes -> raw int32
-        device indices, dispatched without blocking (the caller clamps with
-        ``kernels.planes.finalize_indices`` after its one sync point). This
-        is the entry the serving layer's async micro-batch pipeline drives;
-        the numpy reference has no device planes and raises."""
-        if (backend or self.default_backend) == "numpy":
-            raise ValueError("numpy backend has no async plane-level path")
-        return self.backend_impl(backend).lookup_planes(qhi, qlo)
+        The per-backend plane-level entry points collapsed into the fused
+        stacked contract (``LaneResult``-returning, delta/cache aware); this
+        thin shim forwards one chunk of (hi, lo) uint32 query planes to the
+        single-shard stacked impl and returns its global clamped int32
+        indices. Host backends have no device planes and raise."""
+        warnings.warn(
+            "LearnedIndex.lookup_planes is deprecated; drive "
+            "LearnedIndex.stacked_impl(backend).lookup_planes(...) instead",
+            DeprecationWarning, stacklevel=2)
+        backend = backend or self.default_backend
+        if get_backend(backend).host:
+            raise ValueError(
+                f"{backend} backend has no async plane-level path")
+        return self.stacked_impl(backend).lookup_planes(qhi, qlo).out
 
 
 def shard_offsets(keys: np.ndarray, n_shards: int) -> np.ndarray:
@@ -195,8 +218,8 @@ class Snapshot:
         freeze_arrays(self.keys, self.offsets, self.shard_min)
         for s in self.shards:
             s.plex.freeze()
-        self._stacked = None
-        self._stacked_cfg = None
+        self._stacked = {}            # (backend, block, probe, slots) -> impl
+        self._stacked_last = None
         self._stacked_built = False
         # durable warm-start hook (persist.format): a thunk yielding the
         # per-shard host planes straight from a memmapped snapshot file, so
@@ -268,29 +291,35 @@ class Snapshot:
                        0, self.n_shards - 1)
 
     # -- stacked single-dispatch path ---------------------------------------
-    def stacked_impl(self, *, block: int = 512, probe: str | None = None,
-                     cache_slots: int = 0):
-        """The fused shard-major jnp path for this snapshot, or ``None`` when
-        the shards' static parameters could not be unified. Cached per
-        configuration (a serving layer asks with one fixed config, so this
-        is one build per snapshot in practice)."""
-        cfg = (block, probe, cache_slots)
-        if not self._stacked_built or self._stacked_cfg != cfg:
-            from ..kernels.jnp_lookup import StackedJnpPlex
+    def stacked_impl(self, backend: str = "jnp", *, block: int = 512,
+                     probe: str | None = None, cache_slots: int = 0):
+        """The fused shard-major stacked path for this snapshot on
+        ``backend`` (resolved through the registry), or ``None`` when the
+        shards' static parameters could not be unified. Cached per
+        configuration — including ``None`` results — so a benchmark sweep
+        that alternates backends per call never rebuilds device planes."""
+        spec = get_backend(backend)
+        if spec.stacked_factory is None:
+            raise ValueError(
+                f"backend {backend!r} has no stacked device path")
+        cfg = (backend, block, probe, cache_slots)
+        if cfg not in self._stacked:
             hps = (self._host_planes_fn()
                    if self._host_planes_fn is not None else None)
-            self._stacked = StackedJnpPlex.from_plexes(
+            self._stacked[cfg] = spec.stacked_factory(
                 [s.plex for s in self.shards], self.offsets, block=block,
-                probe=probe, cache_slots=cache_slots, host_planes=hps)
-            self._stacked_cfg = cfg
+                probe=probe, cache_slots=cache_slots, host_planes=hps,
+                sharding=None)
             self._stacked_built = True
-        return self._stacked
+        self._stacked_last = self._stacked[cfg]
+        return self._stacked_last
 
     def built_stacked(self):
-        """The stacked impl if one has already been built, else ``None`` —
-        a side-effect-free peek (no device plane construction) for callers
-        that only need to poke an existing instance (cache reset)."""
-        return self._stacked if self._stacked_built else None
+        """The most recently served stacked impl if one has already been
+        built, else ``None`` — a side-effect-free peek (no device plane
+        construction) for callers that only need to poke an existing
+        instance (cache reset)."""
+        return self._stacked_last if self._stacked_built else None
 
     # -- durability (persist subsystem) --------------------------------------
     def save(self, gen_dir, *, fsync: bool = True):

@@ -68,7 +68,7 @@ def plan_from_dir(gen_dir: str | pathlib.Path, n_devices: int, *,
 def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
                           d: int, device: Any, *, block: int,
                           probe: str | None = None, cache_slots: int = 0,
-                          verify: bool = False
+                          verify: bool = False, backend: str = "jnp"
                           ) -> tuple[DevicePartition, Snapshot | None]:
     """Partial-load device ``d``'s shard range and build its device-local
     pipeline. Returns the partition plus the backing partial snapshot
@@ -83,7 +83,8 @@ def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
     row_off = np.asarray(snap.offsets, dtype=np.int64) + snap.key_base
     impl, sharding = build_device_impl(
         snap.shards, row_off, device, block=block, probe=probe,
-        cache_slots=cache_slots, host_planes=snap._host_planes_fn())
+        cache_slots=cache_slots, host_planes=snap._host_planes_fn(),
+        backend=backend)
     if impl is None:
         raise ValueError(f"device {d}: shards [{lo}, {hi}) could not be "
                          f"unified into one stacked pipeline")
@@ -93,7 +94,8 @@ def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
 
 def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
                 devices: Sequence, *, block: int, probe: str | None = None,
-                cache_slots: int = 0, verify: bool = False
+                cache_slots: int = 0, verify: bool = False,
+                backend: str = "jnp"
                 ) -> tuple[RoutedStackedLookup, list[Snapshot], int]:
     """Partial-load every plan device and assemble the routed mesh lookup.
 
@@ -124,7 +126,7 @@ def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
     for d in range(plan.n_devices):
         part, snap = open_device_partition(
             gen_dir, plan, d, devices[d], block=block, probe=probe,
-            cache_slots=cache_slots, verify=verify)
+            cache_slots=cache_slots, verify=verify, backend=backend)
         parts.append(part)
         if snap is not None:
             snaps.append(snap)

@@ -4,8 +4,10 @@ The stacked layout (``kernels.planes.build_stacked_planes``) fuses shard
 planes into shard-major slabs; before this module every slab lived on one
 device (replication by default placement). The partitioner splits the
 stacked build along a ``PlacementPlan``'s device boundaries instead: each
-device gets *one* ``StackedJnpPlex`` holding only its contiguous shard
-range, placed via a single-device ``NamedSharding`` resolved through the
+device gets *one* stacked impl (whichever backend the registry resolves —
+the jit'd jnp pipeline or the fused Pallas kernel) holding only its
+contiguous shard range, placed via a single-device ``NamedSharding``
+resolved through the
 ``parallel.sharding`` rules — the same placement machinery the training
 stack uses, so a future multi-axis mesh changes the rule table, not this
 code.
@@ -32,7 +34,7 @@ from typing import Any, Sequence
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
-from ..kernels.jnp_lookup import StackedJnpPlex
+from ..kernels.backends import get_backend
 from ..parallel.sharding import logical_sharding
 from .placement import PlacementPlan, plan_matches
 
@@ -59,7 +61,7 @@ class DevicePartition:
     sharding: NamedSharding
     shard_lo: int
     shard_hi: int
-    impl: StackedJnpPlex | None
+    impl: Any                  # stacked impl (lookup_planes contract) | None
 
     @property
     def n_shards(self) -> int:
@@ -72,14 +74,20 @@ class DevicePartition:
 
 def build_device_impl(shards: Sequence, row_off: np.ndarray, device: Any, *,
                       block: int, probe: str | None = None,
-                      cache_slots: int = 0, host_planes=None
-                      ) -> tuple[StackedJnpPlex | None, NamedSharding]:
+                      cache_slots: int = 0, host_planes=None,
+                      backend: str = "jnp"
+                      ) -> tuple[Any, NamedSharding]:
     """One device's stacked pipeline over ``shards`` with *global*
-    ``row_off``, planes placed on ``device``. Shared by the in-memory
-    partitioner below and the partial-snapshot loader
-    (``distrib.loader``), so both construct byte-identical slabs."""
+    ``row_off``, planes placed on ``device``, built by ``backend``'s
+    registered stacked factory. Shared by the in-memory partitioner below
+    and the partial-snapshot loader (``distrib.loader``), so both
+    construct byte-identical slabs."""
+    spec = get_backend(backend)
+    if spec.stacked_factory is None:
+        raise ValueError(
+            f"backend {backend!r} has no stacked device path")
     sharding = device_sharding(device)
-    impl = StackedJnpPlex.from_plexes(
+    impl = spec.stacked_factory(
         [s.plex for s in shards], np.asarray(row_off, dtype=np.int64),
         block=block, probe=probe, cache_slots=cache_slots,
         host_planes=host_planes, sharding=sharding)
@@ -88,7 +96,7 @@ def build_device_impl(shards: Sequence, row_off: np.ndarray, device: Any, *,
 
 def partition_stacked(snap, plan: PlacementPlan, devices: Sequence, *,
                       block: int, probe: str | None = None,
-                      cache_slots: int = 0
+                      cache_slots: int = 0, backend: str = "jnp"
                       ) -> list[DevicePartition] | None:
     """Split ``snap``'s stacked layout into per-device slabs along
     ``plan``'s boundaries.
@@ -119,7 +127,8 @@ def partition_stacked(snap, plan: PlacementPlan, devices: Sequence, *,
         hps = hp_fn(lo, hi) if hp_fn is not None else None
         impl, sharding = build_device_impl(
             snap.shards[lo:hi], row_off, devices[d], block=block,
-            probe=probe, cache_slots=cache_slots, host_planes=hps)
+            probe=probe, cache_slots=cache_slots, host_planes=hps,
+            backend=backend)
         if impl is None:
             return None
         parts.append(DevicePartition(device=devices[d], sharding=sharding,

@@ -1,14 +1,47 @@
 """Pallas TPU kernels for batched PLEX lookups + pure-jnp oracles.
 
 Layout per kernel contract: ``<name>.py`` (pl.pallas_call + BlockSpec),
-``ops.py`` (jit'd assembly), ``ref.py`` (pure-jnp oracle). Validated in
+``ops.py`` (jit'd assembly), ``ref.py`` (pure-jnp oracle),
+``stacked_pallas.py`` (the fused stacked serving kernel). Validated in
 interpret mode on CPU; BlockSpecs keep lanes at multiples of 128 for the
 TPU target.
-"""
-from .flash_attention import flash_attention_fwd
-from .jnp_lookup import JnpPlex
-from .ops import DevicePlex
-from .planes import PlexPlanes, build_planes
 
-__all__ = ["DevicePlex", "JnpPlex", "PlexPlanes", "build_planes",
-           "flash_attention_fwd"]
+Exports resolve lazily (PEP 562) so that importing a light submodule —
+``repro.kernels.backends``, the jax-free registry the host-only dispatch
+layer depends on — never drags jax in through this package init.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "DevicePlex": "ops",
+    "JnpPlex": "jnp_lookup",
+    "StackedJnpPlex": "jnp_lookup",
+    "StackedPallasPlex": "stacked_pallas",
+    "PlexPlanes": "planes",
+    "build_planes": "planes",
+    "flash_attention_fwd": "flash_attention",
+    "Backend": "backends",
+    "register_backend": "backends",
+    "unregister_backend": "backends",
+    "get_backend": "backends",
+    "backend_names": "backends",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(f".{module}", __name__), name)
+    globals()[name] = value      # cache: subsequent accesses skip the hook
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

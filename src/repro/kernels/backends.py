@@ -1,0 +1,131 @@
+"""The backend registry — the one place lookup backend names resolve.
+
+Every dispatch surface (``core.index.LearnedIndex``, ``serving.PlexService``,
+``distrib.partition.build_device_impl``) resolves backend names through
+``get_backend``; nothing outside this module branches on a backend name
+string. A backend is described by two factories:
+
+* ``stacked_factory`` — the serving hot path. Satisfies the
+  ``build_device_impl`` contract: ``(plexes, row_off, *, block, probe,
+  cache_slots, host_planes, sharding) -> impl | None`` where the impl
+  conforms to ``StackedJnpPlex``'s ``lookup_planes(qhi, qlo, n_valid=None,
+  delta=None) -> LaneResult`` protocol (global clamped int32 indices, async
+  dispatch, optional merged delta fold + hot-key cache). Returning ``None``
+  means the shards' statics could not be unified and the caller falls back
+  to per-shard dispatch. ``None`` for the whole factory marks a host-only
+  backend with no stacked device path.
+* ``index_factory`` — the per-index batched path behind
+  ``LearnedIndex.lookup``: ``(plex, *, block, device) -> impl`` with a
+  ``lookup(q) -> np.ndarray`` method. Host backends (``host=True``) skip it
+  and serve straight from the ``PLEX`` itself.
+
+Built-in registrations keep their heavyweight imports (jax, the kernel
+modules) inside the factory closures, so importing this module stays cheap
+and host-only users never pull jax.
+
+Third-party backends plug in with::
+
+    from repro.kernels.backends import register_backend
+    register_backend("mine", my_stacked_factory, index_factory=my_factory)
+
+and are immediately reachable from ``LearnedIndex.lookup(backend="mine")``,
+``PlexService(backend="mine")``, and routed mesh partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered lookup backend (see the module docstring for the
+    factory contracts)."""
+    name: str
+    stacked_factory: Optional[Callable[..., Any]]
+    index_factory: Optional[Callable[..., Any]] = None
+    host: bool = False
+
+    @property
+    def stacked(self) -> bool:
+        """Whether this backend has a fused stacked device path."""
+        return self.stacked_factory is not None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+# convenience snapshot of the registered names, refreshed on registration;
+# kept as a tuple for the historical ``BACKENDS`` import sites (tests,
+# benchmark sweeps). Use ``backend_names()`` when late registrations matter.
+BACKENDS: tuple[str, ...] = ()
+
+
+def register_backend(name: str,
+                     stacked_factory: Optional[Callable[..., Any]], *,
+                     index_factory: Optional[Callable[..., Any]] = None,
+                     host: bool = False,
+                     overwrite: bool = False) -> Backend:
+    """Register (or with ``overwrite=True`` replace) a lookup backend."""
+    global BACKENDS
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"backend {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    spec = Backend(name=name, stacked_factory=stacked_factory,
+                   index_factory=index_factory, host=host)
+    _REGISTRY[name] = spec
+    BACKENDS = tuple(_REGISTRY)
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (primarily for tests)."""
+    global BACKENDS
+    _REGISTRY.pop(name, None)
+    BACKENDS = tuple(_REGISTRY)
+
+
+def get_backend(name: str) -> Backend:
+    """Resolve a backend name, or raise the one well-worded unknown-backend
+    error every dispatch surface shares."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(repr(n) for n in _REGISTRY)}") from None
+
+
+def backend_names() -> tuple[str, ...]:
+    """The currently registered backend names, registration order."""
+    return tuple(_REGISTRY)
+
+
+# -- built-ins ---------------------------------------------------------------
+
+def _numpy_index(px, *, block, device):   # pragma: no cover - host passthrough
+    return px
+
+
+def _jnp_index(px, *, block, device):
+    from .jnp_lookup import JnpPlex
+    return JnpPlex.from_plex(px, block=block, device=device)
+
+
+def _jnp_stacked(plexes, row_off, **kw):
+    from .jnp_lookup import StackedJnpPlex
+    return StackedJnpPlex.from_plexes(plexes, row_off, **kw)
+
+
+def _pallas_index(px, *, block, device):
+    from .ops import DevicePlex
+    return DevicePlex.from_plex(px, block=block)
+
+
+def _pallas_stacked(plexes, row_off, **kw):
+    from .stacked_pallas import StackedPallasPlex
+    return StackedPallasPlex.from_plexes(plexes, row_off, **kw)
+
+
+register_backend("numpy", None, index_factory=_numpy_index, host=True)
+register_backend("jnp", _jnp_stacked, index_factory=_jnp_index)
+register_backend("pallas", _pallas_stacked, index_factory=_pallas_index)

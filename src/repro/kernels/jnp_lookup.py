@@ -187,12 +187,14 @@ def delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, *, cap: int):
     return jnp.take(dcum, cnt)
 
 
-def _stacked_merged(sp: StackedPlanes, probe: str, cap: int, qhi, qlo,
-                    dkhi, dklo, dcum):
+def _stacked_merged(pipeline, cap: int, qhi, qlo, dkhi, dklo, dcum):
     """Snapshot pipeline + delta fold: global *merged* first-occurrence
     indices equal to searchsorted over the logical (snapshot - tombstones +
-    inserts) key array, in one dispatch."""
-    out = _stacked_pipeline(sp, probe, qhi, qlo)
+    inserts) key array, in one dispatch. ``pipeline`` is the backend's
+    snapshot-rank function ``(qhi, qlo) -> int32 [B]`` (the jnp stacked
+    pipeline here; the Pallas backend fuses the fold into its kernel and
+    does not use this composition)."""
+    out = pipeline(qhi, qlo)
     return out + delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, cap=cap)
 
 
@@ -207,9 +209,15 @@ def _cache_slot(qhi, qlo, n_slots: int):
 _CACHE_EMPTY = 0xFFFFFFFF   # sentinel value row; real indices are < 2^31
 
 
-def _stacked_cached(sp: StackedPlanes, probe: str, cap: int, qhi, qlo,
+def _stacked_cached(pipeline, cap: int, qhi, qlo,
                     n_valid, cache, dkhi=None, dklo=None, dcum=None):
     """Stacked (optionally merged) pipeline + device hot-key result cache.
+
+    ``pipeline`` is the backend's snapshot-rank function ``(qhi, qlo) ->
+    int32 [B]`` — the jnp stacked pipeline or the fused Pallas kernel; the
+    cache resolution, write-through, and delta fold below are backend-
+    independent management that wraps whichever pipeline misses run
+    through.
 
     The cache is explicit state threaded through every micro-batch: one
     uint32 [3, n_slots] array (rows: key hi, key lo, cached *snapshot*
@@ -247,7 +255,7 @@ def _stacked_cached(sp: StackedPlanes, probe: str, cap: int, qhi, qlo,
         return cval.astype(jnp.int32)
 
     def slow(_):
-        return _stacked_pipeline(sp, probe, qhi, qlo)
+        return pipeline(qhi, qlo)
 
     snap = jax.lax.cond(full_hit, fast, slow, None)
     snap = jnp.where(hit, cval.astype(jnp.int32), snap)
@@ -278,6 +286,15 @@ class StackedJnpPlex:
     lazily per delta capacity (``_merged_fns``/``_cached_fns``); the
     delta-free fns stay separate so read-only epochs pay nothing for
     updatability.
+
+    This class is also the base of every stacked device backend: the
+    micro-batch management (lazy per-capacity compilation, hot-key cache
+    state, ``lookup_planes``/``lookup``) is backend-independent, and a
+    subclass swaps the compute by overriding the builder hooks —
+    ``_snapshot_fn`` (snapshot ranks; feeds the cached wrapper) and
+    ``_build_fn`` (the full, possibly delta-merged dispatch). The Pallas
+    backend (``stacked_pallas.StackedPallasPlex``) overrides exactly
+    those two.
     """
 
     planes: StackedPlanes
@@ -295,7 +312,7 @@ class StackedJnpPlex:
     def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
                     block: int = DEFAULT_BLOCK, probe: str | None = None,
                     cache_slots: int = 0, host_planes=None,
-                    sharding=None) -> "StackedJnpPlex | None":
+                    sharding=None, **impl_kw) -> "StackedJnpPlex | None":
         """Build the fused stacked path, or ``None`` when the shards' static
         parameters cannot be unified (the caller falls back to per-shard
         dispatch). ``host_planes`` feeds a persisted snapshot's precomputed
@@ -303,7 +320,8 @@ class StackedJnpPlex:
         ``sharding`` places the planes (and the hot-key cache state) on one
         mesh device — the distrib partitioner's per-device slab placement;
         queries fed to ``lookup_planes`` must then be committed to the same
-        device so the dispatch stays device-local."""
+        device so the dispatch stays device-local. Extra keywords pass
+        through to the subclass constructor (backend-specific fields)."""
         probe = probe or default_probe_mode()
         if probe not in PROBE_MODES:
             raise ValueError(f"unknown probe mode {probe!r}")
@@ -314,15 +332,37 @@ class StackedJnpPlex:
         if sp is None:
             return None
         st = cls(planes=sp, block=block, probe=probe,
-                 cache_slots=int(cache_slots), sharding=sharding)
-        st._fn = jax.jit(functools.partial(_stacked_pipeline, sp, probe))
+                 cache_slots=int(cache_slots), sharding=sharding, **impl_kw)
+        st._fn = st._build_fn(0)
         if cache_slots:
-            st._cached_fn = jax.jit(
-                functools.partial(_stacked_cached, sp, probe, 0))
+            st._cached_fn = st._build_cached_fn(0)
             cache = np.full((3, cache_slots), _CACHE_EMPTY, np.uint32)
             st._cache = (jnp.asarray(cache) if sharding is None
                          else jax.device_put(cache, sharding))
         return st
+
+    # -- backend builder hooks ----------------------------------------------
+    def _snapshot_fn(self):
+        """The snapshot-rank pipeline ``(qhi, qlo) -> int32 [B]`` (untraced;
+        the cached wrapper composes around it). Subclasses override."""
+        return functools.partial(_stacked_pipeline, self.planes, self.probe)
+
+    def _build_fn(self, cap: int):
+        """jit'd full dispatch at delta capacity ``cap`` (0 = delta-free:
+        ``(qhi, qlo)``; else merged: ``(qhi, qlo, dkhi, dklo, dcum)``).
+        Subclasses override to swap the compute."""
+        if cap == 0:
+            return jax.jit(self._snapshot_fn())
+        return jax.jit(functools.partial(_stacked_merged,
+                                         self._snapshot_fn(), cap))
+
+    def _build_cached_fn(self, cap: int):
+        """jit'd hot-key-cached dispatch at delta capacity ``cap``. The
+        cache wrapper itself is backend-independent (``_stacked_cached``);
+        it wraps whatever ``_snapshot_fn`` the backend supplies, so cached
+        misses still run the backend's own pipeline."""
+        return jax.jit(functools.partial(_stacked_cached,
+                                         self._snapshot_fn(), cap))
 
     @property
     def n_real_total(self) -> int:
@@ -340,16 +380,14 @@ class StackedJnpPlex:
     def _merged_fn(self, cap: int):
         fn = self._merged_fns.get(cap)
         if fn is None:
-            fn = jax.jit(functools.partial(_stacked_merged, self.planes,
-                                           self.probe, cap))
+            fn = self._build_fn(cap)
             self._merged_fns[cap] = fn
         return fn
 
     def _cached_merged_fn(self, cap: int):
         fn = self._cached_merged_fns.get(cap)
         if fn is None:
-            fn = jax.jit(functools.partial(_stacked_cached, self.planes,
-                                           self.probe, cap))
+            fn = self._build_cached_fn(cap)
             self._cached_merged_fns[cap] = fn
         return fn
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -52,6 +53,8 @@ class DevicePlex:
     block: int
     interpret: bool
     _fn: Any = None
+    _px: Any = None            # source PLEX, for the deprecated shim below
+    _stacked: Any = None
 
     @classmethod
     def from_plex(cls, px: PLEX, *, block: int = DEFAULT_BLOCK,
@@ -61,23 +64,35 @@ class DevicePlex:
                  dlo=pp.dlo, n_data=pp.n_data, n_real=pp.n_real, kind=pp.kind,
                  layer_arrays=pp.layer_arrays, static=pp.static,
                  eps_eff=pp.eps_eff, window=pp.window, block=block,
-                 interpret=interpret)
+                 interpret=interpret, _px=px)
         dp._fn = jax.jit(functools.partial(_lookup_pipeline, dp))
         return dp
 
     def lookup_planes(self, qhi, qlo):
-        """One block-multiple chunk of query planes -> raw int32 indices
-        (may exceed ``n_real``; callers clamp). Dispatches asynchronously:
-        the result is a device array. Same entry contract as
-        ``JnpPlex.lookup_planes``, so the serving layer can drive either
-        accelerated backend through one async micro-batch pipeline."""
-        return self._fn(jnp.asarray(qhi), jnp.asarray(qlo))
+        """Deprecated: the serving layer drives the fused stacked kernel
+        (``stacked_pallas.StackedPallasPlex``) instead — one ``pallas_call``
+        for the whole pipeline where this multi-kernel path dispatched
+        three. This shim forwards one block-multiple chunk of query planes
+        to a lazily built single-shard stacked impl and returns its global
+        clamped int32 indices (clamping is idempotent under the historical
+        caller contract)."""
+        warnings.warn(
+            "DevicePlex.lookup_planes is deprecated; drive "
+            "StackedPallasPlex.lookup_planes (the fused stacked kernel) "
+            "instead", DeprecationWarning, stacklevel=2)
+        if self._stacked is None:
+            from .stacked_pallas import StackedPallasPlex
+            self._stacked = StackedPallasPlex.from_plexes(
+                [self._px], np.zeros(1, dtype=np.int64), block=self.block,
+                interpret=self.interpret)
+        return self._stacked.lookup_planes(
+            jnp.asarray(qhi), jnp.asarray(qlo)).out
 
     def lookup(self, q: np.ndarray) -> np.ndarray:
         """Batched device lookup; same contract as PLEX.lookup."""
         qp, b = pad_queries(q, self.block)
         qh, ql = split_u64(qp)
-        out = self.lookup_planes(qh, ql)
+        out = self._fn(jnp.asarray(qh), jnp.asarray(ql))
         return finalize_indices(out, b, self.n_real)
 
 

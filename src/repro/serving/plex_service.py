@@ -111,6 +111,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..core.index import BACKENDS, SHARD_MAX_KEYS, LearnedIndex, Snapshot
+from ..kernels.backends import get_backend
 from ..distrib.partition import partition_stacked
 from ..distrib.placement import PlacementPlan, plan_matches, plan_placement
 from ..distrib.routed_lookup import RoutedStackedLookup
@@ -299,8 +300,7 @@ class PlexService:
                  wal_rotate_bytes: int = DEFAULT_WAL_ROTATE_BYTES,
                  _snapshot: Snapshot | None = None,
                  **build_kw):
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}")
+        get_backend(backend)          # fail unknown names at construction
         if block % 128 != 0:
             raise ValueError("block must be a multiple of 128 lanes")
         # fail at construction, not at the first serving-path lookup
@@ -458,7 +458,8 @@ class PlexService:
         device span (placement is snapshot-scoped state, exactly like the
         stacked planes)."""
         req = self._plan_req
-        if req is None or self.default_backend != "jnp":
+        if req is None or get_backend(self.default_backend).stacked_factory \
+                is None:
             return None
         if isinstance(req, PlacementPlan) and plan_matches(
                 req, snap.offsets, snap.keys.size, snap.shard_min):
@@ -468,7 +469,8 @@ class PlexService:
             plan = plan_placement(snap, min(int(n_dev), len(self._devices)))
         parts = partition_stacked(snap, plan, self._devices,
                                   block=self.block, probe=self.probe,
-                                  cache_slots=self.cache_slots)
+                                  cache_slots=self.cache_slots,
+                                  backend=self.default_backend)
         if parts is None:
             return None
         return RoutedStackedLookup(plan, parts, self.block)
@@ -491,14 +493,17 @@ class PlexService:
         return out
 
     # -- stacked single-dispatch path ---------------------------------------
-    def stacked_impl(self, state: _ServiceState | None = None):
-        """The fused shard-major jnp path of ``state``'s snapshot (the
-        current one by default), or ``None`` when the shards' static
-        parameters could not be unified (per-shard fallback). Callers that
-        already captured a state MUST pass it, so a concurrent swap can
-        never pair one snapshot's planes with another epoch's delta."""
+    def stacked_impl(self, state: _ServiceState | None = None,
+                     backend: str | None = None):
+        """The fused shard-major stacked path of ``state``'s snapshot (the
+        current one by default) on ``backend`` (the service default when
+        omitted), or ``None`` when the shards' static parameters could not
+        be unified (per-shard fallback). Callers that already captured a
+        state MUST pass it, so a concurrent swap can never pair one
+        snapshot's planes with another epoch's delta."""
         state = state if state is not None else self._state
         return state.snapshot.stacked_impl(
+            backend or self.default_backend,
             block=self.block, probe=self.probe, cache_slots=self.cache_slots)
 
     @staticmethod
@@ -616,19 +621,21 @@ class PlexService:
         n = q.size
         b = self.block
         n_batches = -(-n // b)
-        if backend == "numpy":
+        if get_backend(backend).host:
             out = np.empty(n, dtype=np.int64)
             for i, mb in enumerate(self._microbatches(q)):
                 take = min(b, n - i * b)
                 out[i * b:i * b + take] = shard.lookup(mb,
                                                       backend=backend)[:take]
         else:
+            # single-shard stacked impl (a lone shard always unifies); its
+            # out is already clamped with the shard-local offset (0) folded
+            st = shard.stacked_impl(backend, probe=self.probe)
             # co-locate micro-batches with a mesh-pinned shard's planes
             put = (functools.partial(jax.device_put, device=shard.device)
-                   if backend == "jnp" and shard.device is not None
-                   else lambda a: a)
+                   if shard.device is not None else lambda a: a)
             qh_all, ql_all = split_u64(np.ascontiguousarray(q))
-            devs = [shard.lookup_planes(put(qh), put(ql), backend=backend)
+            devs = [st.lookup_planes(put(qh), put(ql)).out
                     for qh, ql in self._block_planes(qh_all, ql_all)]
             self.stats.inflight_batches += n_batches
             out = finalize_indices(
@@ -642,16 +649,17 @@ class PlexService:
         """Global first-occurrence index per query key in the *logical*
         (snapshot plus delta) key array."""
         backend = backend or self.default_backend
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}")
+        spec = get_backend(backend)
         q = np.ascontiguousarray(q, dtype=np.uint64)
         if q.size == 0:
             return np.zeros(0, dtype=np.int64)
         state = self._state       # one consistent (snapshot, delta) capture
-        if backend == "jnp":
-            if state.router is not None:
+        if spec.stacked_factory is not None:
+            # the router is built for (and its parts placed by) the default
+            # backend; other stacked backends take the single-device path
+            if state.router is not None and backend == self.default_backend:
                 return self._routed_lookup(state, q)
-            st = self.stacked_impl(state)
+            st = self.stacked_impl(state, backend)
             if st is not None:
                 return self._stacked_lookup(st, q, state)
         snap = state.snapshot
@@ -969,8 +977,8 @@ class PlexService:
             # mesh path fills tickets synchronously (its host binning is
             # per-batch; queue formation stays a single-device feature)
             st = (self.stacked_impl()
-                  if self.default_backend == "jnp"
-                  and self._state.router is None else None)
+                  if get_backend(self.default_backend).stacked_factory
+                  is not None and self._state.router is None else None)
             if st is None:
                 ticket._out[:] = self.lookup(q)
                 ticket._filled = q.size
@@ -1084,14 +1092,16 @@ class PlexService:
                 self._flush_partial(self.stacked_impl())
             self._drain_outstanding()
 
-    def _warm_stacked(self, snap: Snapshot, delta_cap: int | None) -> bool:
+    def _warm_stacked(self, snap: Snapshot, delta_cap: int | None,
+                      backend: str | None = None) -> bool:
         """Compile the exact serving dispatch for ``snap`` — same batch
         sharding layout and cache state as the micro-batch pipeline — plus,
         when ``delta_cap`` is given, the merged variant at that capacity
         (warmed with a zero-weight dummy entry, which leaves every result
         untouched). Does not touch the stats; returns False when the shards
         did not unify."""
-        st = snap.stacked_impl(block=self.block, probe=self.probe,
+        st = snap.stacked_impl(backend or self.default_backend,
+                               block=self.block, probe=self.probe,
                                cache_slots=self.cache_slots)
         if st is None:
             return False
@@ -1114,14 +1124,14 @@ class PlexService:
         queue flush on the deadline timer thread ever hits a cold
         compile."""
         backend = backend or self.default_backend
-        if backend == "jnp":
+        if get_backend(backend).stacked_factory is not None:
             state = self._state
             dv = self._delta_view(state)
             cap = dv.cap if dv is not None else self._delta_capacity
-            if state.router is not None:
+            if state.router is not None and backend == self.default_backend:
                 state.router.warmup(np.uint64(state.snapshot.keys[0]), cap)
                 return
-            if self._warm_stacked(state.snapshot, cap):
+            if self._warm_stacked(state.snapshot, cap, backend):
                 return
         for shard in self.shards:
             shard.warmup(backend)
