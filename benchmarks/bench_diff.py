@@ -4,8 +4,9 @@
     python -m benchmarks.bench_diff OLD.json NEW.json [--threshold 0.15]
 
 Records are matched on (dataset, n, eps, backend, workload, write_frac,
-n_devices — the last two only set for ``update_mix`` / ``mesh_scale``
-records respectively, so differently-mixed or differently-spanned sweeps
+n_devices, fallback_backend — the last three only set for
+``update_mix`` / ``mesh_scale`` / ``degraded`` records respectively, so
+differently-mixed, differently-spanned, or differently-degraded sweeps
 never collide); a matched record whose ``ns_per_lookup`` grew by more than
 ``--threshold`` (default 15%) is a regression and the exit code is
 non-zero. Records present on only one side (new datasets, schema-additive
@@ -32,7 +33,7 @@ Key = tuple
 def _key(rec: dict) -> Key:
     return (rec["dataset"], rec["n"], rec["eps"], rec["backend"],
             rec.get("workload", "uniform"), rec.get("write_frac", -1.0),
-            rec.get("n_devices", -1))
+            rec.get("n_devices", -1), rec.get("fallback_backend", ""))
 
 
 def load(path: str | pathlib.Path) -> dict[Key, dict]:

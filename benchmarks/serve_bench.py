@@ -17,7 +17,14 @@ time plus the first-batch latency after ``open()``. The persisted
 directories live under ``BENCH_SNAPSHOT_DIR`` (default
 ``bench-snapshots/``) and are *reused* when a valid one is already there —
 CI caches them across runs so the bench_diff baseline warm-starts instead
-of rebuilding from raw keys. A ``mesh_scale`` workload measures the
+of rebuilding from raw keys. A ``degraded`` workload prices the resilience
+layer's fallback chain: an always-failing jnp dispatch fault (armed
+through the resilience registry in a try/finally) opens the jnp circuit
+breaker, so the same queries are served — still exactly — through the
+numpy fallback; the record's ``ns_per_lookup`` is the degraded-path cost
+an operator should expect during a backend outage, and
+``fallback_backend`` names the backend that actually served. A
+``mesh_scale`` workload measures the
 distribution subsystem: the same 8-shard snapshot served through placement
 plans spanning 1/2/4/8 mesh devices (the multi-device CI leg forces 8
 host CPU devices via ``XLA_FLAGS``; plan widths past the available device
@@ -29,14 +36,16 @@ can diff the perf trajectory (``benchmarks.bench_diff``):
 
     {"dataset": str, "n": int, "eps": int, "backend": str,
      "workload": "uniform" | "zipf" | "update_mix" | "cold_vs_warm"
-                 | "mesh_scale",
+                 | "mesh_scale" | "degraded",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
 
 Zipf records additionally carry ``cache_hit_rate``; update_mix records
 carry ``write_frac`` and ``merges``; cold_vs_warm records carry
 ``load_s``, ``first_batch_s``, and ``warm_speedup``; mesh_scale records
-carry ``n_devices`` (all schema-additive, and ``n_devices`` is part of
-the ``bench_diff`` match key so differently-spanned runs never collide).
+carry ``n_devices``; degraded records carry ``fallback_backend`` (all
+schema-additive, and ``n_devices`` / ``fallback_backend`` are part of the
+``bench_diff`` match key so differently-spanned or differently-degraded
+runs never collide).
 
 Pallas interpret mode is a correctness harness, not a timing target, so it
 is measured over a smaller query slice; the recorded number tracks
@@ -203,6 +212,37 @@ def _run_mesh_scale(keys: np.ndarray, q: np.ndarray,
     return out
 
 
+def _run_degraded(keys: np.ndarray, q: np.ndarray,
+                  eps: int = ZIPF_EPS) -> dict:
+    """Degraded-path throughput: jnp forced down, numpy serves.
+
+    Arms an always-failing jnp dispatch fault (cleared in the finally —
+    a bench crash must never leak an armed fault into later sections),
+    verifies the first batch still matches searchsorted exactly through
+    the fallback, waits for the breaker to open, then times the steady
+    degraded state: the open breaker skips jnp outright, so the measured
+    number is the numpy chain cost plus breaker bookkeeping — what a real
+    backend outage would serve at, not the fault-trip overhead."""
+    from repro.resilience import (FAULTS, OPEN, POINT_BACKEND_DISPATCH,
+                                  always)
+    want = np.searchsorted(keys, q, side="left")
+    svc = PlexService(keys, eps=eps, breaker_threshold=1)
+    FAULTS.inject(POINT_BACKEND_DISPATCH, always(backend="jnp"))
+    try:
+        got = svc.lookup(q[:20_000], backend="jnp")
+        assert np.array_equal(got, want[:20_000]), "degraded lookup wrong"
+        assert svc.stats.breakers["jnp"] == OPEN, "breaker failed to open"
+        assert svc.health()["degraded"], "health must report degraded"
+        ns = svc.throughput(q, backends=("jnp",),
+                            repeats=REPEATS["numpy"])["jnp"]
+    finally:
+        FAULTS.clear(POINT_BACKEND_DISPATCH)
+    return {
+        "ns_per_lookup": ns, "build_s": svc.build_s,
+        "size_bytes": svc.size_bytes, "fallback_backend": "numpy",
+    }
+
+
 def _run_cold_vs_warm(dname: str, eps: int = ZIPF_EPS,
                       n: int | None = None) -> dict:
     """Durability workload: build (or reuse the cached persisted copy),
@@ -265,7 +305,8 @@ def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
     rows.append("serve,dataset,n,eps,backend,workload,ns_per_lookup,"
                 "build_s,size_bytes,cache_hit_rate,write_frac,merges,"
-                "load_s,first_batch_s,warm_speedup,n_devices")
+                "load_s,first_batch_s,warm_speedup,n_devices,"
+                "fallback_backend")
     records: list[dict] = []
     for dname, keys in datasets().items():
         q = queries(keys)
@@ -343,6 +384,20 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                 "n_devices": int(ms["n_devices"]),
                 "n_active": int(ms["n_active"]),
             })
+        # resilience: forced jnp outage served through the fallback chain
+        dg = _run_degraded(keys, q)
+        rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,degraded,"
+                    f"{dg['ns_per_lookup']:.1f},{dg['build_s']:.3f},"
+                    f"{dg['size_bytes']},,,,,,,,"
+                    f"{dg['fallback_backend']}")
+        records.append({
+            "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
+            "backend": "jnp", "workload": "degraded",
+            "ns_per_lookup": round(float(dg["ns_per_lookup"]), 1),
+            "build_s": round(float(dg["build_s"]), 4),
+            "size_bytes": int(dg["size_bytes"]),
+            "fallback_backend": dg["fallback_backend"],
+        })
         # durability: cold build vs warm-start open at COLD_WARM_N keys
         cw = _run_cold_vs_warm(dname)
         rows.append(f"serve,{dname},{cw['n']},{ZIPF_EPS},jnp,cold_vs_warm,"

@@ -1,0 +1,129 @@
+"""Chaos drill: fault-inject a live service end to end, print health().
+
+Walks one durable PlexService through the full rainy-day repertoire and
+verifies at every step that degraded serving stays *exact* (equal to
+``np.searchsorted`` over the logical keys):
+
+1. backend outage  — an always-failing jnp dispatch fault opens the jnp
+   circuit breaker; lookups degrade to numpy with identical answers, then
+   the breaker half-open probe recovers once the fault clears.
+2. merge failure   — a snapshot-rebuild fault is contained: the live
+   (snapshot, delta, router) state keeps serving bit-identically and the
+   next merge succeeds.
+3. commit failure  — a manifest-rename fault aborts the durable commit
+   with the directory swept back to the committed state.
+4. crash + corruption recovery — the newest generation's snapshot is
+   destroyed on disk; ``open()`` quarantines it and falls back to the
+   retained last-known-good generation, replaying its WAL.
+
+``health()`` snapshots are collected after each phase and written as JSON
+(``--health-out``) — the chaos CI job uploads that file as its artifact,
+so every run leaves an inspectable record of breaker states, error
+journals, and recovery decisions.
+
+    PYTHONPATH=src python examples/chaos_drill.py [--n 200000] \
+        [--dir /tmp/plex-chaos] [--health-out chaos-health.json]
+"""
+import argparse
+import json
+import pathlib
+import shutil
+
+import numpy as np
+
+from repro.data import generate
+from repro.persist import gen_name
+from repro.resilience import (FAULTS, POINT_BACKEND_DISPATCH,
+                              POINT_MANIFEST_COMMIT, POINT_MERGE_BUILD,
+                              always, fail_once)
+from repro.serving import PlexService
+
+
+def check_exact(svc, model, rng, label):
+    q = model[rng.integers(0, model.size, 50_000)]
+    got = svc.lookup(q)
+    want = np.searchsorted(model, q, side="left")
+    assert np.array_equal(got, want), f"{label}: degraded lookup diverged"
+    print(f"  [{label}] 50k lookups exact "
+          f"(fallbacks so far: {svc.stats.fallback_lookups})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--eps", type=int, default=64)
+    ap.add_argument("--dataset", default="osm",
+                    choices=["amzn", "face", "osm", "wiki"])
+    ap.add_argument("--dir", default="/tmp/plex-chaos")
+    ap.add_argument("--health-out", default="chaos-health.json")
+    args = ap.parse_args()
+
+    root = pathlib.Path(args.dir)
+    shutil.rmtree(root, ignore_errors=True)
+    rng = np.random.default_rng(0)
+    keys = generate(args.dataset, args.n)
+    phases: dict[str, dict] = {}
+
+    # merge_threshold=0: merges are explicit, so each phase controls
+    # exactly when the build/commit under test runs
+    svc = PlexService(keys.copy(), eps=args.eps, breaker_threshold=2,
+                      keep_generations=2, merge_threshold=0)
+    svc.save(root, fsync=False)
+    model = svc.logical_keys().copy()
+
+    # ---- 1: backend outage -> breaker opens -> numpy serves -----------
+    print("phase 1: jnp dispatch outage")
+    FAULTS.inject(POINT_BACKEND_DISPATCH, always(backend="jnp"))
+    try:
+        check_exact(svc, model, rng, "outage")
+        check_exact(svc, model, rng, "outage")   # 2nd failure opens breaker
+        assert svc.health()["degraded"], "breaker should be open"
+    finally:
+        FAULTS.clear(POINT_BACKEND_DISPATCH)
+    phases["backend_outage"] = svc.health()
+
+    # ---- 2: merge failure is contained --------------------------------
+    print("phase 2: mid-merge build failure")
+    svc.insert(rng.integers(keys[0], keys[-1], 5_000, dtype=np.uint64))
+    model = svc.logical_keys().copy()
+    with FAULTS.injected(POINT_MERGE_BUILD, fail_once()):
+        try:
+            svc.merge()
+        except Exception as e:
+            print(f"  merge contained: {type(e).__name__}")
+    check_exact(svc, model, rng, "post-merge-fault")
+    phases["merge_failure"] = svc.health()
+
+    # ---- 3: durable commit failure aborts cleanly ----------------------
+    print("phase 3: manifest commit failure")
+    with FAULTS.injected(POINT_MANIFEST_COMMIT, fail_once()):
+        try:
+            svc.merge()
+        except Exception as e:
+            print(f"  commit aborted: {type(e).__name__} "
+                  f"(still generation {svc.generation})")
+    assert svc.merge(), "clean retry must commit"
+    print(f"  clean retry committed generation {svc.generation}")
+    check_exact(svc, model, rng, "post-commit")
+    phases["commit_failure"] = svc.health()
+    gen_now = svc.generation
+    svc.close()
+
+    # ---- 4: corruption -> last-known-good recovery ---------------------
+    print("phase 4: newest generation corrupted on disk")
+    (root / gen_name(gen_now) / "snapshot.plex").write_bytes(b"garbage")
+    svc = PlexService.open(root, fsync=False)
+    print(f"  recovered at generation {svc.generation} "
+          f"(quarantined {gen_name(gen_now)}); "
+          f"{svc.n_pending} WAL entries replayed")
+    check_exact(svc, np.asarray(svc.logical_keys()), rng, "recovered")
+    phases["lkg_recovery"] = svc.health()
+    svc.close()
+
+    out = pathlib.Path(args.health_out)
+    out.write_text(json.dumps(phases, indent=1))
+    print(f"drill complete; health snapshots -> {out}")
+
+
+if __name__ == "__main__":
+    main()

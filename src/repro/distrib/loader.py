@@ -19,6 +19,7 @@ device's placement assigns it. This module is the glue above it:
 """
 from __future__ import annotations
 
+import logging
 import pathlib
 from typing import Any, Sequence
 
@@ -27,10 +28,14 @@ import numpy as np
 from ..core.index import Snapshot
 from ..persist.format import (SNAPSHOT_FILE, _map_planes, _read_header,
                               load_snapshot)
+from ..resilience.errors import PartitionLoadError
+from ..resilience.faults import POINT_PARTITION_LOAD, fire
 from .partition import DevicePartition, build_device_impl, device_sharding
 from .placement import (PlacementPlan, _plan_from_arrays, plan_matches,
                         scale_by_hotness)
 from .routed_lookup import RoutedStackedLookup
+
+log = logging.getLogger("repro.distrib")
 
 
 def weights_from_header(header: dict) -> np.ndarray:
@@ -79,12 +84,18 @@ def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
         return DevicePartition(device=device,
                                sharding=device_sharding(device),
                                shard_lo=lo, shard_hi=hi, impl=None), None
-    snap = load_snapshot(gen_dir, shard_range=(lo, hi), verify=verify)
-    row_off = np.asarray(snap.offsets, dtype=np.int64) + snap.key_base
-    impl, sharding = build_device_impl(
-        snap.shards, row_off, device, block=block, probe=probe,
-        cache_slots=cache_slots, host_planes=snap._host_planes_fn(),
-        backend=backend)
+    try:
+        # chaos point + typed wrap, mirroring partition_stacked: a failed
+        # partial load names its device so open_routed can drop exactly it
+        fire(POINT_PARTITION_LOAD, device=d)
+        snap = load_snapshot(gen_dir, shard_range=(lo, hi), verify=verify)
+        row_off = np.asarray(snap.offsets, dtype=np.int64) + snap.key_base
+        impl, sharding = build_device_impl(
+            snap.shards, row_off, device, block=block, probe=probe,
+            cache_slots=cache_slots, host_planes=snap._host_planes_fn(),
+            backend=backend)
+    except Exception as e:
+        raise PartitionLoadError(d, device, e) from e
     if impl is None:
         raise ValueError(f"device {d}: shards [{lo}, {hi}) could not be "
                          f"unified into one stacked pipeline")
@@ -95,7 +106,7 @@ def open_device_partition(gen_dir: str | pathlib.Path, plan: PlacementPlan,
 def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
                 devices: Sequence, *, block: int, probe: str | None = None,
                 cache_slots: int = 0, verify: bool = False,
-                backend: str = "jnp"
+                backend: str = "jnp", on_device_failure: str = "raise"
                 ) -> tuple[RoutedStackedLookup, list[Snapshot], int]:
     """Partial-load every plan device and assemble the routed mesh lookup.
 
@@ -103,7 +114,16 @@ def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
     snapshots must outlive the router (their maps back the device planes'
     host staging); ``mapped_bytes`` sums each device's actual maps — the
     whole point, and the tests pin it strictly below one full load.
+
+    ``on_device_failure`` chooses the reaction to a ``PartitionLoadError``:
+    ``"raise"`` (default) propagates it; ``"replan"`` drops the failed
+    device from the candidate list, re-derives the placement over the
+    survivors, and retries — degraded capacity, identical results. With a
+    single surviving device the error propagates regardless (nothing left
+    to re-plan onto).
     """
+    if on_device_failure not in ("raise", "replan"):
+        raise ValueError(f"unknown on_device_failure {on_device_failure!r}")
     if plan.n_devices > len(devices):
         raise ValueError(f"plan spans {plan.n_devices} devices but got "
                          f"{len(devices)}")
@@ -120,15 +140,34 @@ def open_routed(gen_dir: str | pathlib.Path, plan: PlacementPlan,
             f"plan does not match the shard table persisted in {gen_dir} "
             "(stale plan from another generation? re-derive with "
             "plan_from_dir)")
-    parts: list[DevicePartition] = []
-    snaps: list[Snapshot] = []
-    mapped = 0
-    for d in range(plan.n_devices):
-        part, snap = open_device_partition(
-            gen_dir, plan, d, devices[d], block=block, probe=probe,
-            cache_slots=cache_slots, verify=verify, backend=backend)
-        parts.append(part)
-        if snap is not None:
-            snaps.append(snap)
-            mapped += snap.mapped_bytes
-    return RoutedStackedLookup(plan, parts, block), snaps, mapped
+
+    def _assemble(plan_cur: PlacementPlan, devs: list
+                  ) -> tuple[RoutedStackedLookup, list[Snapshot], int]:
+        parts: list[DevicePartition] = []
+        snaps: list[Snapshot] = []
+        mapped = 0
+        for d in range(plan_cur.n_devices):
+            part, snap = open_device_partition(
+                gen_dir, plan_cur, d, devs[d], block=block, probe=probe,
+                cache_slots=cache_slots, verify=verify, backend=backend)
+            parts.append(part)
+            if snap is not None:
+                snaps.append(snap)
+                mapped += snap.mapped_bytes
+        return RoutedStackedLookup(plan_cur, parts, block), snaps, mapped
+
+    devs = list(devices)
+    plan_cur = plan
+    while True:
+        try:
+            return _assemble(plan_cur, devs)
+        except PartitionLoadError as e:
+            if on_device_failure != "replan" or len(devs) <= 1:
+                raise
+            dropped = devs.pop(e.device_index)
+            log.warning("open_routed(%s): device %d (%r) failed to load "
+                        "(%s); re-planning onto %d surviving device(s)",
+                        gen_dir, e.device_index, dropped, e.cause,
+                        len(devs))
+            plan_cur = plan_from_dir(
+                gen_dir, min(plan_cur.n_devices, len(devs)))

@@ -36,6 +36,8 @@ from jax.sharding import Mesh, NamedSharding
 
 from ..kernels.backends import get_backend
 from ..parallel.sharding import logical_sharding
+from ..resilience.errors import PartitionLoadError
+from ..resilience.faults import POINT_PARTITION_LOAD, fire
 from .placement import PlacementPlan, plan_matches
 
 # plane slabs are device-local state: no logical axis maps them to a mesh
@@ -125,10 +127,17 @@ def partition_stacked(snap, plan: PlacementPlan, devices: Sequence, *,
             continue
         row_off = np.asarray(snap.offsets[lo:hi], dtype=np.int64)
         hps = hp_fn(lo, hi) if hp_fn is not None else None
-        impl, sharding = build_device_impl(
-            snap.shards[lo:hi], row_off, devices[d], block=block,
-            probe=probe, cache_slots=cache_slots, host_planes=hps,
-            backend=backend)
+        try:
+            # chaos point + typed wrap: any failure building THIS device's
+            # slab names the device, so the serving layer can drop exactly
+            # it and re-plan onto the survivors
+            fire(POINT_PARTITION_LOAD, device=d)
+            impl, sharding = build_device_impl(
+                snap.shards[lo:hi], row_off, devices[d], block=block,
+                probe=probe, cache_slots=cache_slots, host_planes=hps,
+                backend=backend)
+        except Exception as e:
+            raise PartitionLoadError(d, devices[d], e) from e
         if impl is None:
             return None
         parts.append(DevicePartition(device=devices[d], sharding=sharding,

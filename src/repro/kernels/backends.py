@@ -30,11 +30,24 @@ Third-party backends plug in with::
 
 and are immediately reachable from ``LearnedIndex.lookup(backend="mine")``,
 ``PlexService(backend="mine")``, and routed mesh partitioning.
+
+Fault injection: registration instruments every factory (built-in and
+third-party alike) with the resilience registry's named points —
+``backend.factory`` fires when an impl is built, ``backend.dispatch``
+fires on every ``lookup_planes`` / batched ``lookup`` call of the built
+impl, both carrying ``backend=<name>`` context. An unarmed registry costs
+one attribute read per dispatch; armed scenarios let chaos tests fail a
+specific backend's micro-batch dispatches deterministically, which is
+what exercises the serving layer's fallback chain and circuit breakers.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional
+
+from ..resilience.faults import (POINT_BACKEND_DISPATCH,
+                                 POINT_BACKEND_FACTORY, fire)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +73,63 @@ _REGISTRY: dict[str, Backend] = {}
 BACKENDS: tuple[str, ...] = ()
 
 
+def _hook_dispatch(impl: Any, name: str, method: str) -> None:
+    """Bind an instrumented ``method`` on ``impl`` that fires the
+    ``backend.dispatch`` injection point before delegating. Instance-level
+    binding keeps ``isinstance`` and every other attribute intact; impls
+    that refuse instance attributes (slots/frozen) are left untouched —
+    they simply cannot be fault-injected per dispatch."""
+    orig = getattr(impl, method, None)
+    if orig is None:
+        return
+
+    @functools.wraps(orig)
+    def instrumented(*args, **kw):
+        fire(POINT_BACKEND_DISPATCH, backend=name)
+        return orig(*args, **kw)
+
+    try:
+        setattr(impl, method, instrumented)
+    except (AttributeError, TypeError):  # pragma: no cover - exotic impls
+        pass
+
+
+def _instrument_stacked(name: str,
+                        factory: Optional[Callable[..., Any]]
+                        ) -> Optional[Callable[..., Any]]:
+    if factory is None:
+        return None
+
+    @functools.wraps(factory)
+    def wrapped(*args, **kw):
+        fire(POINT_BACKEND_FACTORY, backend=name)
+        impl = factory(*args, **kw)
+        if impl is not None:
+            _hook_dispatch(impl, name, "lookup_planes")
+        return impl
+
+    return wrapped
+
+
+def _instrument_index(name: str,
+                      factory: Optional[Callable[..., Any]]
+                      ) -> Optional[Callable[..., Any]]:
+    if factory is None:
+        return None
+
+    @functools.wraps(factory)
+    def wrapped(px, *args, **kw):
+        fire(POINT_BACKEND_FACTORY, backend=name)
+        impl = factory(px, *args, **kw)
+        # passthrough factories (numpy) return the shared PLEX itself;
+        # hooking that would leak the instrumentation to other backends
+        if impl is not None and impl is not px:
+            _hook_dispatch(impl, name, "lookup")
+        return impl
+
+    return wrapped
+
+
 def register_backend(name: str,
                      stacked_factory: Optional[Callable[..., Any]], *,
                      index_factory: Optional[Callable[..., Any]] = None,
@@ -70,8 +140,10 @@ def register_backend(name: str,
     if not overwrite and name in _REGISTRY:
         raise ValueError(f"backend {name!r} is already registered "
                          "(pass overwrite=True to replace it)")
-    spec = Backend(name=name, stacked_factory=stacked_factory,
-                   index_factory=index_factory, host=host)
+    spec = Backend(name=name,
+                   stacked_factory=_instrument_stacked(name, stacked_factory),
+                   index_factory=_instrument_index(name, index_factory),
+                   host=host)
     _REGISTRY[name] = spec
     BACKENDS = tuple(_REGISTRY)
     return spec

@@ -56,6 +56,7 @@ from ..core.radix_table import RadixTable
 from ..core.spline import Spline
 from ..kernels.pairs import split_u64
 from ..kernels.planes import _HostPlanes, _host_statics
+from ..resilience.faults import POINT_SNAPSHOT_MAP, fire
 from .manifest import fsync_dir
 
 MAGIC = b"PLEXSNP1"
@@ -353,6 +354,10 @@ def load_snapshot(gen_dir: str | pathlib.Path, *, verify: bool = False,
     """
     gen_dir = pathlib.Path(gen_dir)
     path = gen_dir / SNAPSHOT_FILE
+    # chaos point for the open path: a trip here is indistinguishable from
+    # an unreadable/corrupt generation, which is exactly what the service's
+    # generation-by-generation fallback must survive
+    fire(POINT_SNAPSHOT_MAP, gen_dir=gen_dir.name)
     header, payload_base = _read_header(path)
     eps = int(header["eps"])
     n_shards = int(header["n_shards"])

@@ -27,6 +27,8 @@ import os
 import pathlib
 import zlib
 
+from ..resilience.faults import POINT_MANIFEST_COMMIT, fire
+
 MANIFEST_NAME = "MANIFEST.json"
 SCHEMA_VERSION = 1
 
@@ -94,7 +96,21 @@ def write_manifest(root: str | pathlib.Path, man: Manifest, *,
         if fsync:
             os.fsync(f.fileno())
     path = root / MANIFEST_NAME
-    os.replace(tmp, path)              # the commit
+    try:
+        # chaos point fires before the rename: a trip means nothing
+        # committed — the previous manifest (and therefore generation)
+        # stays live
+        fire(POINT_MANIFEST_COMMIT)
+        os.replace(tmp, path)          # the commit
+    except BaseException:
+        # a caught failure additionally sweeps the orphan temp, so an
+        # aborted publish leaves the directory byte-identical (a crash
+        # still may leave the temp; the next publish overwrites it)
+        try:
+            tmp.unlink()
+        except OSError:  # pragma: no cover
+            pass
+        raise
     if fsync:
         fsync_dir(root)
     return path

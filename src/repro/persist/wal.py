@@ -46,6 +46,7 @@ import zlib
 
 import numpy as np
 
+from ..resilience.faults import POINT_WAL_APPEND, POINT_WAL_FSYNC, fire
 from .manifest import fsync_dir
 
 log = logging.getLogger("repro.persist")
@@ -113,16 +114,25 @@ class WriteAheadLog:
         the caller may only mutate the in-memory delta afterwards."""
         if op not in _OPS:
             raise ValueError(f"unknown WAL opcode {op}")
+        # injection points for the chaos matrix: a trip anywhere in here
+        # surfaces to the caller BEFORE the delta buffer mutates, so the
+        # WAL-before-mutation invariant (durable >= served) always holds
+        fire(POINT_WAL_APPEND)
         rec = _encode_record(op, keys)
         self._fh.write(rec)
         self._fh.flush()
         if self.fsync:
+            fire(POINT_WAL_FSYNC)
             os.fsync(self._fh.fileno())
         return len(rec)
 
     @property
     def size_bytes(self) -> int:
         return self._fh.tell()
+
+    @property
+    def closed(self) -> bool:
+        return self._fh is None
 
     def rotate(self, ops) -> "WriteAheadLog":
         """Compact this segment in place and return the fresh handle.

@@ -1,0 +1,43 @@
+"""Resilience layer: fault injection, circuit breakers, typed failures.
+
+The serving stack's sunny-day story (PRs 1-6) assumed every dispatch
+lands, every fsync returns, and every generation directory verifies. This
+package is the rainy-day half:
+
+* ``faults``   — a deterministic, seedable fault-injection registry with
+  named injection points compiled into the real backend-dispatch,
+  WAL/manifest, snapshot-mapping, and partition-load paths. Chaos tests
+  replay bit-identically.
+* ``breakers`` — per-backend circuit breakers (closed / open / half-open
+  single-probe) behind ``PlexService``'s backend fallback chain: a failed
+  pallas or jnp dispatch degrades to the next backend with the *same*
+  lookup semantics — degraded mode is slower, never wrong.
+* ``errors``   — the typed failure vocabulary the whole degraded path
+  speaks (``BackendUnavailableError``, ``PartitionLoadError``,
+  ``QueueFullError``, ``MergeFailedError``,
+  ``NoServableGenerationError``).
+
+Nothing here imports jax or the kernels — arming a fault or reading a
+breaker snapshot is host-only, cheap, and safe in any process.
+"""
+from .breakers import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from .errors import (BackendUnavailableError, MergeFailedError,
+                     NoServableGenerationError, PartitionLoadError,
+                     QueueFullError, ResilienceError)
+from .faults import (FAULTS, INJECTION_POINTS, FaultRegistry, InjectedFault,
+                     POINT_BACKEND_DISPATCH, POINT_BACKEND_FACTORY,
+                     POINT_MANIFEST_COMMIT, POINT_MERGE_BUILD,
+                     POINT_PARTITION_LOAD, POINT_SNAPSHOT_MAP,
+                     POINT_WAL_APPEND, POINT_WAL_FSYNC, Scenario, always,
+                     fail_n, fail_once, fire, injected, intermittent)
+
+__all__ = [
+    "BackendUnavailableError", "CLOSED", "CircuitBreaker", "FAULTS",
+    "FaultRegistry", "HALF_OPEN", "INJECTION_POINTS", "InjectedFault",
+    "MergeFailedError", "NoServableGenerationError", "OPEN",
+    "POINT_BACKEND_DISPATCH", "POINT_BACKEND_FACTORY",
+    "POINT_MANIFEST_COMMIT", "POINT_MERGE_BUILD", "POINT_PARTITION_LOAD",
+    "POINT_SNAPSHOT_MAP", "POINT_WAL_APPEND", "POINT_WAL_FSYNC",
+    "PartitionLoadError", "QueueFullError", "ResilienceError", "Scenario",
+    "always", "fail_n", "fail_once", "fire", "injected", "intermittent",
+]

@@ -82,6 +82,24 @@ One serving front-end over the snapshot + delta ownership model:
   delta; torn WAL tails and uncommitted generations from a crash are
   logged and discarded.
 
+* **Fault tolerance.** Every lookup runs through a **fallback chain**
+  guarded by per-backend **circuit breakers**: a failed dispatch (or an
+  open breaker) retries the identical merged lookup on the next backend —
+  pallas -> jnp -> numpy by default — so degraded serving is slower,
+  never wrong; only a fully exhausted chain raises (typed,
+  ``BackendUnavailableError``). Merge failures are **isolated**: a thrown
+  rebuild/re-plan/durable-commit leaves the live (snapshot, delta,
+  router) triple untouched and retries with capped exponential backoff.
+  ``open()`` recovers **last-known-good**: an unservable newest
+  generation is quarantined and the next older retained one
+  (``keep_generations``) serves. A failed device partition drops exactly
+  that device and re-plans onto the survivors. ``max_queue`` bounds the
+  submit queue (reject or shed, both typed), ``drain(timeout=)`` /
+  ``result(timeout=)`` turn a wedged queue into ``TimeoutError``, and
+  ``health()`` reports generation, queue depth, WAL bytes, breaker
+  states, and recent errors. The chaos story lives in
+  ``repro.resilience`` (deterministic fault injection at named points).
+
 Consistency contract: updates (and merges) first drain the submit queue,
 so every queued lookup observes the state at its dispatch; lookups then see
 delta changes immediately. Mutations are single-writer (serialised under
@@ -120,9 +138,16 @@ from ..kernels.pairs import split_u64
 from ..kernels.planes import finalize_indices
 from ..parallel.sharding import logical_sharding
 from ..persist.format import load_snapshot, save_snapshot
-from ..persist.manifest import (Manifest, gen_name, read_manifest, wal_name,
-                                write_manifest)
+from ..persist.manifest import (CorruptManifestError, Manifest, gen_name,
+                                read_manifest, wal_name, write_manifest)
 from ..persist.wal import OP_DELETE, OP_INSERT, WriteAheadLog
+from ..resilience.breakers import (CLOSED, DEFAULT_COOLDOWN_S,
+                                   DEFAULT_FAILURE_THRESHOLD, CircuitBreaker)
+from ..resilience.errors import (BackendUnavailableError, MergeFailedError,
+                                 NoServableGenerationError,
+                                 PartitionLoadError, QueueFullError)
+from ..resilience.faults import (FAULTS, POINT_BACKEND_DISPATCH,
+                                 POINT_MERGE_BUILD, fire)
 from .delta import DELTA_CAP_MIN, DeltaBuffer, next_pow2
 
 __all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD",
@@ -149,6 +174,14 @@ DEFAULT_MERGE_THRESHOLD = 4096
 # insert/delete churn an epoch appends. 0 disables rotation.
 DEFAULT_WAL_ROTATE_BYTES = 4 << 20
 
+# the canonical degradation order for fallback="auto": every backend
+# computes the identical answer, so each step right is slower, never wrong
+_CHAIN_ORDER = ("pallas", "jnp", "numpy")
+
+# where open()'s last-known-good recovery moves unservable generations —
+# outside every gen-*/wal-* glob, so GC and recovery scans never see them
+QUARANTINE_DIR = "quarantine"
+
 
 @dataclasses.dataclass
 class ServiceStats:
@@ -168,6 +201,14 @@ class ServiceStats:
     merges: int = 0
     merge_s: float = 0.0          # snapshot rebuild time (build, not serve)
     wal_rotations: int = 0        # durable-WAL compactions (bounded replay)
+    # resilience counters
+    fallback_lookups: int = 0     # lookups answered by a non-first backend
+    backend_failures: int = 0     # dispatch/sync failures (incl. injected)
+    merge_failures: int = 0       # contained merge/commit failures
+    shed_queries: int = 0         # admission-control rejected/shed lanes
+    # per-backend breaker states (mirrors CircuitBreaker.state; the full
+    # snapshots live in PlexService.health())
+    breakers: dict = dataclasses.field(default_factory=dict)
 
     def note(self, n_queries: int, n_batches: int, n_padded: int) -> None:
         self.queries += n_queries
@@ -200,21 +241,31 @@ class LookupTicket:
     """Handle for a ``PlexService.submit`` batch.
 
     Filled in-place as its micro-batches drain; ``result()`` forces a
-    service-wide ``drain()`` when lanes are still outstanding."""
+    service-wide ``drain()`` when lanes are still outstanding. A ticket
+    whose work failed terminally (fallback chain exhausted, queue shed)
+    carries the error and re-raises it from ``result()`` — a ticket never
+    hangs and never returns partial garbage."""
 
     def __init__(self, svc: "PlexService", n: int):
         self._svc = svc
         self.n = n
         self._out = np.empty(n, dtype=np.int64)
         self._filled = 0
+        self._error: BaseException | None = None
 
     @property
     def ready(self) -> bool:
         return self._filled >= self.n
 
-    def result(self) -> np.ndarray:
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        """The batch's indices; drains the service when lanes are still
+        outstanding. ``timeout`` bounds that drain — on expiry a
+        ``TimeoutError`` propagates and the ticket stays valid for a
+        later call (a wedged queue raises instead of blocking forever)."""
         if not self.ready:
-            self._svc.drain()
+            self._svc.drain(timeout=timeout)
+        if self._error is not None:
+            raise self._error
         assert self.ready
         return self._out
 
@@ -268,23 +319,64 @@ def _coalesce_ops(records: Sequence[tuple[int, np.ndarray]]
         yield run_op, np.concatenate(run)
 
 
-def _gc_generations(root: pathlib.Path, keep: int) -> None:
-    """Remove every generation dir and WAL segment other than ``keep``
-    (called only after the manifest has committed ``keep``, so the
-    removals can never touch recoverable state). Best-effort: a leftover
-    from a failed removal is re-collected on the next rotation."""
-    keep_dir, keep_wal = gen_name(keep), wal_name(keep)
+def _gen_num(p: pathlib.Path) -> int | None:
+    """Generation number encoded in a ``gen-*`` / ``wal-*`` name, or
+    ``None`` for a name that doesn't parse (never delete what we cannot
+    identify)."""
+    try:
+        return int(p.stem.split("-", 1)[1])
+    except (IndexError, ValueError):
+        return None
+
+
+def _gc_generations(root: pathlib.Path, keep: int, retain: int = 1) -> None:
+    """Remove generation dirs and WAL segments superseded by ``keep``,
+    retaining the newest ``retain`` generations (``keep`` itself plus up
+    to ``retain - 1`` predecessors — the last-known-good fallback
+    candidates for ``PlexService.open``). Called only after the manifest
+    has committed ``keep``, so the removals can never touch recoverable
+    state. Best-effort: a leftover from a failed removal is re-collected
+    on the next rotation."""
+    retain = max(int(retain), 1)
+    gens = sorted((g for p in root.glob("gen-*")
+                   if p.is_dir() and (g := _gen_num(p)) is not None
+                   and g <= keep), reverse=True)
+    live = set(gens[:retain]) | {keep}
     for p in root.glob("gen-*"):
-        if p.is_dir() and p.name != keep_dir:
+        if p.is_dir() and _gen_num(p) not in live:
             log.info("gc(%s): removing generation %s", root, p.name)
             shutil.rmtree(p, ignore_errors=True)
     for p in root.glob("wal-*.log"):
-        if p.name != keep_wal:
+        if _gen_num(p) not in live:
             log.info("gc(%s): removing WAL segment %s", root, p.name)
             try:
                 p.unlink()
             except OSError:  # pragma: no cover
                 pass
+
+
+def _quarantine(root: pathlib.Path, *paths: pathlib.Path) -> None:
+    """Move unservable on-disk state into ``root/quarantine/`` instead of
+    deleting it — a bad generation is forensic evidence, and the
+    quarantine dir sits outside every ``gen-*``/``wal-*`` glob so GC and
+    recovery scans never reconsider it. Best-effort: a path that cannot
+    be moved is left in place for the operator."""
+    qdir = root / QUARANTINE_DIR
+    for p in paths:
+        if not p.exists():
+            continue
+        try:
+            qdir.mkdir(exist_ok=True)
+            target = qdir / p.name
+            if target.is_dir():
+                shutil.rmtree(target, ignore_errors=True)
+            elif target.exists():
+                target.unlink()
+            p.rename(target)
+            log.warning("quarantine(%s): moved %s aside", root, p.name)
+        except OSError as e:  # pragma: no cover - fs-specific
+            log.warning("quarantine(%s): could not move %s (%s)", root,
+                        p.name, e)
 
 
 class PlexService:
@@ -298,6 +390,14 @@ class PlexService:
                  merge_threshold: int = DEFAULT_MERGE_THRESHOLD,
                  plan: PlacementPlan | int | None = None,
                  wal_rotate_bytes: int = DEFAULT_WAL_ROTATE_BYTES,
+                 fallback: object = "auto",
+                 breaker_threshold: int = DEFAULT_FAILURE_THRESHOLD,
+                 breaker_cooldown_s: float = DEFAULT_COOLDOWN_S,
+                 breaker_clock=time.monotonic,
+                 max_queue: int = 0, overflow: str = "reject",
+                 merge_backoff_s: float = 0.05,
+                 merge_backoff_cap_s: float = 5.0,
+                 keep_generations: int = 1,
                  _snapshot: Snapshot | None = None,
                  **build_kw):
         get_backend(backend)          # fail unknown names at construction
@@ -341,6 +441,42 @@ class PlexService:
             raise ValueError("plan must be an int device count or a "
                              "PlacementPlan")
         self._plan_req = plan
+
+        # resilience: fallback chain + per-backend circuit breakers +
+        # admission control + merge backoff. fallback is "auto" (degrade
+        # along pallas -> jnp -> numpy from the default backend's
+        # position), None (no fallback), or an explicit name sequence.
+        if overflow not in ("reject", "shed"):
+            raise ValueError("overflow must be 'reject' or 'shed'")
+        if max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+        if keep_generations < 1:
+            raise ValueError("keep_generations must be >= 1")
+        if isinstance(fallback, str) and fallback != "auto":
+            raise ValueError("fallback must be 'auto', None, or a sequence "
+                             "of backend names")
+        if fallback is not None and fallback != "auto":
+            fallback = tuple(fallback)
+            for b in fallback:
+                get_backend(b)        # fail unknown chain names up front
+        self._fallback_req = fallback
+        self.max_queue = int(max_queue)
+        self.overflow = overflow
+        self.keep_generations = int(keep_generations)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self._breaker_clock = breaker_clock
+        self.merge_backoff_s = float(merge_backoff_s)
+        self.merge_backoff_cap_s = float(merge_backoff_cap_s)
+        self._chains: dict[str, tuple[str, ...]] = {}
+        self._breakers: dict[str, CircuitBreaker] = {}
+        self._chain = self._chain_for(backend)
+        for b in self._chain:
+            self.stats.breakers[b] = self._breaker(b).state
+        self._last_errors: collections.deque = collections.deque(maxlen=16)
+        self._consec_merge_failures = 0
+        self._merge_retry_at = 0.0
+        self._closed = False
 
         # fixed delta capacity: the merge threshold bounds the buffer, so
         # sizing the device view to it up front means the merged pipeline
@@ -461,16 +597,38 @@ class PlexService:
         if req is None or get_backend(self.default_backend).stacked_factory \
                 is None:
             return None
+        devices = list(self._devices)
         if isinstance(req, PlacementPlan) and plan_matches(
                 req, snap.offsets, snap.keys.size, snap.shard_min):
             plan = req
         else:
             n_dev = req.n_devices if isinstance(req, PlacementPlan) else req
-            plan = plan_placement(snap, min(int(n_dev), len(self._devices)))
-        parts = partition_stacked(snap, plan, self._devices,
-                                  block=self.block, probe=self.probe,
-                                  cache_slots=self.cache_slots,
-                                  backend=self.default_backend)
+            plan = plan_placement(snap, min(int(n_dev), len(devices)))
+        while True:
+            try:
+                parts = partition_stacked(snap, plan, devices,
+                                          block=self.block, probe=self.probe,
+                                          cache_slots=self.cache_slots,
+                                          backend=self.default_backend)
+            except PartitionLoadError as e:
+                # device loss: drop exactly the failed device and re-plan
+                # the same snapshot onto the survivors (degraded capacity,
+                # identical routing math); with no survivors left, serve
+                # the legacy single-device path instead
+                self._note_error(e)
+                if len(devices) <= 1:
+                    log.warning("router: %s; no surviving device to "
+                                "re-plan onto, falling back to the legacy "
+                                "path", e)
+                    return None
+                dropped = devices.pop(e.device_index)
+                log.warning("router: %s; re-planning onto %d surviving "
+                            "device(s) (dropped %r)", e, len(devices),
+                            dropped)
+                plan = plan_placement(snap, min(plan.n_devices,
+                                                len(devices)))
+                continue
+            break
         if parts is None:
             return None
         return RoutedStackedLookup(plan, parts, self.block)
@@ -589,6 +747,101 @@ class PlexService:
         self.stats.note_drained(n_batches)
         return res.astype(np.int64)
 
+    # -- resilience ---------------------------------------------------------
+    def _chain_for(self, backend: str) -> tuple[str, ...]:
+        """The fallback chain starting at ``backend``: the requested
+        backend first, then each configured fallback that is actually
+        registered. ``"auto"`` degrades along pallas -> jnp -> numpy from
+        the requested backend's position (a custom backend falls back to
+        jnp then numpy); an explicit sequence is honoured in order;
+        ``None`` disables fallback entirely."""
+        chain = self._chains.get(backend)
+        if chain is not None:
+            return chain
+        req = self._fallback_req
+        if req is None:
+            tail: tuple[str, ...] = ()
+        elif req == "auto":
+            start = _CHAIN_ORDER.index(backend) + 1 \
+                if backend in _CHAIN_ORDER else 1
+            tail = _CHAIN_ORDER[start:]
+        else:
+            tail = req
+        out = [backend]
+        for b in tail:
+            if b in out:
+                continue
+            try:
+                get_backend(b)
+            except ValueError:
+                continue
+            out.append(b)
+        chain = tuple(out)
+        self._chains[backend] = chain
+        return chain
+
+    def _breaker(self, backend: str) -> CircuitBreaker:
+        br = self._breakers.get(backend)
+        if br is None:
+            # setdefault keeps exactly one breaker under lock-free races
+            br = self._breakers.setdefault(backend, CircuitBreaker(
+                backend, failure_threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s,
+                clock=self._breaker_clock))
+        return br
+
+    def _record_breaker(self, br: CircuitBreaker, ok: bool,
+                        error: BaseException | None = None) -> None:
+        if ok:
+            br.record_success()
+        else:
+            br.record_failure(error)
+        self.stats.breakers[br.name] = br.state
+
+    def _note_error(self, e: BaseException) -> None:
+        """Bounded error journal surfaced by ``health()`` (deque appends
+        are atomic, so lock-free readers may note errors too)."""
+        self._last_errors.append(f"{type(e).__name__}: {e}")
+
+    def health(self) -> dict:
+        """One JSON-friendly operational snapshot: what an operator (or
+        the chaos CI job) needs to tell *degraded* from *broken* —
+        generation, queue depth, WAL size, breaker states, recent errors.
+        Lock-free; safe to poll from a monitoring thread while serving."""
+        state = self._state
+        dur = self._dur
+        wal_bytes = 0
+        if dur is not None and not dur.wal.closed:
+            wal_bytes = dur.wal.size_bytes
+        breakers = {n: b.snapshot()
+                    for n, b in sorted(self._breakers.items())}
+        retry_in = max(0.0, self._merge_retry_at - time.monotonic()) \
+            if self._consec_merge_failures else 0.0
+        return {
+            "generation": self.generation,
+            "epoch": int(state.snapshot.epoch),
+            "n_keys": int(state.snapshot.n_keys + state.delta.net_keys),
+            "n_pending": int(state.delta.n_entries),
+            "routed_devices": state.router.plan.n_devices
+            if state.router is not None else 0,
+            "fallback_chain": list(self._chain),
+            "breakers": breakers,
+            "degraded": any(b["state"] != CLOSED for b in breakers.values())
+            or self._consec_merge_failures > 0,
+            "queue_depth": int(self._q_len),
+            "queue_limit": int(self.max_queue),
+            "inflight_batches": int(self.stats.inflight_batches),
+            "shed_queries": int(self.stats.shed_queries),
+            "backend_failures": int(self.stats.backend_failures),
+            "fallback_lookups": int(self.stats.fallback_lookups),
+            "merge_failures": int(self.stats.merge_failures),
+            "merge_retry_in_s": round(retry_in, 3),
+            "wal_bytes": int(wal_bytes),
+            "last_errors": list(self._last_errors),
+            "armed_faults": FAULTS.active(),
+            "closed": self._closed,
+        }
+
     # -- serving ------------------------------------------------------------
     def route(self, q: np.ndarray) -> np.ndarray:
         """Shard id per query (largest shard whose min key is <= q)."""
@@ -647,13 +900,47 @@ class PlexService:
 
     def lookup(self, q: np.ndarray, backend: str | None = None) -> np.ndarray:
         """Global first-occurrence index per query key in the *logical*
-        (snapshot plus delta) key array."""
+        (snapshot plus delta) key array.
+
+        Served through the fallback chain: the requested backend first,
+        then — on a dispatch failure or an open circuit breaker — each
+        configured fallback, all computing the identical answer (degraded
+        is slower, never wrong). A lookup fails only when the whole chain
+        is exhausted, as ``BackendUnavailableError``."""
         backend = backend or self.default_backend
-        spec = get_backend(backend)
+        get_backend(backend)  # unknown names raise here, not as chain noise
         q = np.ascontiguousarray(q, dtype=np.uint64)
         if q.size == 0:
             return np.zeros(0, dtype=np.int64)
         state = self._state       # one consistent (snapshot, delta) capture
+        chain = self._chain_for(backend)
+        last_err: BaseException | None = None
+        for b in chain:
+            br = self._breaker(b)
+            if not br.allow():
+                continue          # open breaker: skip the known-bad backend
+            try:
+                out = self._lookup_backend(state, q, b)
+            except Exception as e:
+                self.stats.backend_failures += 1
+                self._note_error(e)
+                self._record_breaker(br, False, e)
+                last_err = e
+                log.warning("lookup: backend %r failed (%s)%s", b, e,
+                            "; falling back" if b != chain[-1] else "")
+                continue
+            self._record_breaker(br, True)
+            if b != backend:
+                self.stats.fallback_lookups += 1
+            return out
+        raise BackendUnavailableError(chain, last_err) from last_err
+
+    def _lookup_backend(self, state: _ServiceState, q: np.ndarray,
+                        backend: str) -> np.ndarray:
+        """One backend's merged lookup over a captured state: routed mesh,
+        fused stacked, or host/per-shard fallback — identical results on
+        every path (the chain in ``lookup`` relies on that)."""
+        spec = get_backend(backend)
         if spec.stacked_factory is not None:
             # the router is built for (and its parts placed by) the default
             # backend; other stacked backends take the single-device path
@@ -662,6 +949,10 @@ class PlexService:
             st = self.stacked_impl(state, backend)
             if st is not None:
                 return self._stacked_lookup(st, q, state)
+        if spec.host:
+            # host backends have no built impl to instrument, so the
+            # dispatch injection point fires here instead
+            fire(POINT_BACKEND_DISPATCH, backend=backend)
         snap = state.snapshot
         if snap.n_shards == 1:
             out = self._lookup_shard(snap.shards[0], q, backend, 0)
@@ -746,8 +1037,18 @@ class PlexService:
     def _after_update(self, state: _ServiceState) -> None:
         # no cache invalidation needed: cached entries hold delta-
         # independent snapshot ranks (the delta folds in after resolution)
-        if 0 < self.merge_threshold <= state.delta.n_entries:
+        if not 0 < self.merge_threshold <= state.delta.n_entries:
+            return
+        if self._consec_merge_failures and \
+                time.monotonic() < self._merge_retry_at:
+            return    # backing off: the delta keeps serving merged reads
+        try:
             self.merge()
+        except MergeFailedError:
+            # contained — counted and backoff armed inside merge(); the
+            # failed attempt left the live state untouched, so updates
+            # and lookups just keep going against the buffered delta
+            pass
 
     def merge(self) -> bool:
         """Fold the delta into a brand-new snapshot and swap it in.
@@ -770,33 +1071,56 @@ class PlexService:
                 # a snapshot cannot be empty; keep buffering until an
                 # insert arrives (lookups stay correct via the delta fold)
                 return False
-            snap = Snapshot.build(
-                new_keys, self.eps, n_shards=self._n_shards_req,
-                backend=self.default_backend, block=self.block,
-                devices=self._devices, epoch=state.snapshot.epoch + 1,
-                **self._build_kw)
-            # pre-warm the new snapshot's device pipelines while the old
-            # one still serves (only when the jnp path is actually in use),
-            # so the first post-swap lookup never pays a cold compile —
-            # warm time is merge/build work, not serving work. The routed
-            # mesh path re-plans + re-partitions the NEW snapshot here
-            # (placement is snapshot-scoped), warming every device slab.
-            new_router = self._make_router(snap)
-            if new_router is not None:
-                new_router.warmup(np.uint64(snap.keys[0]),
-                                  self._delta_capacity)
-            elif state.snapshot.built_stacked() is not None:
-                self._warm_stacked(snap, self._delta_capacity)
-            # durable mode: commit the new generation (snapshot + fresh WAL
-            # + manifest rename) BEFORE the in-memory swap — a crash in
-            # here leaves the previous generation live with its WAL still
-            # holding every buffered update, so recovery replays to exactly
-            # the pre-merge logical state
-            new_dur = None
-            if self._dur is not None:
-                new_dur = self._commit_generation(
-                    self._dur.root, self._dur.generation + 1, snap, (),
-                    self._dur.fsync)
+            try:
+                fire(POINT_MERGE_BUILD)
+                snap = Snapshot.build(
+                    new_keys, self.eps, n_shards=self._n_shards_req,
+                    backend=self.default_backend, block=self.block,
+                    devices=self._devices, epoch=state.snapshot.epoch + 1,
+                    **self._build_kw)
+                # pre-warm the new snapshot's device pipelines while the
+                # old one still serves (only when the jnp path is actually
+                # in use), so the first post-swap lookup never pays a cold
+                # compile — warm time is merge/build work, not serving
+                # work. The routed mesh path re-plans + re-partitions the
+                # NEW snapshot here (placement is snapshot-scoped),
+                # warming every device slab.
+                new_router = self._make_router(snap)
+                if new_router is not None:
+                    new_router.warmup(np.uint64(snap.keys[0]),
+                                      self._delta_capacity)
+                elif state.snapshot.built_stacked() is not None:
+                    self._warm_stacked(snap, self._delta_capacity)
+                # durable mode: commit the new generation (snapshot +
+                # fresh WAL + manifest rename) BEFORE the in-memory swap —
+                # a crash in here leaves the previous generation live with
+                # its WAL still holding every buffered update, so recovery
+                # replays to exactly the pre-merge logical state
+                new_dur = None
+                if self._dur is not None:
+                    new_dur = self._commit_generation(
+                        self._dur.root, self._dur.generation + 1, snap, (),
+                        self._dur.fsync)
+            except Exception as e:
+                # merge-failure isolation: nothing above touched the live
+                # (snapshot, delta, router) triple or the committed
+                # on-disk generation, so serving continues bit-identically
+                # against the buffered delta; auto-merges retry after a
+                # capped exponential backoff
+                self.stats.merge_failures += 1
+                self._consec_merge_failures += 1
+                backoff = min(self.merge_backoff_cap_s,
+                              self.merge_backoff_s *
+                              2.0 ** (self._consec_merge_failures - 1))
+                self._merge_retry_at = time.monotonic() + backoff
+                self._note_error(e)
+                log.warning("merge failed (attempt %d, retry in %.3fs): "
+                            "%r; live state untouched",
+                            self._consec_merge_failures, backoff, e)
+                raise MergeFailedError(
+                    f"merge failed ({self._consec_merge_failures} "
+                    f"consecutive attempt(s)): {e!r}; the live state is "
+                    "untouched and the delta keeps serving") from e
             # the atomic swap: one reference assignment publishes the new
             # (snapshot, delta, router) triple
             self._state = _ServiceState(
@@ -804,6 +1128,8 @@ class PlexService:
                 new_router)
             if new_dur is not None:
                 self._swap_durable(new_dur)
+            self._consec_merge_failures = 0
+            self._merge_retry_at = 0.0
             self.stats.merges += 1
             self.stats.merge_s += time.perf_counter() - t0
             self.stats.new_epoch(snap.epoch)
@@ -818,12 +1144,25 @@ class PlexService:
         (``DeltaBuffer.pending_ops`` order), then publish with one atomic
         manifest rename. Nothing is live until the rename, so a crash
         anywhere in here leaves the previous generation (and its WAL)
-        authoritative."""
-        save_snapshot(root / gen_name(gen), snap, fsync=fsync)
-        wal = WriteAheadLog.create(root / wal_name(gen), fsync=fsync)
-        for opname, op_keys in seed_ops:
-            wal.append(_WAL_OPS[opname], op_keys)
-        write_manifest(root, Manifest.for_generation(gen), fsync=fsync)
+        authoritative — and a *caught* failure additionally sweeps the
+        partial generation away, so disk state always equals committed
+        state plus at most one in-progress commit."""
+        wal = None
+        try:
+            save_snapshot(root / gen_name(gen), snap, fsync=fsync)
+            wal = WriteAheadLog.create(root / wal_name(gen), fsync=fsync)
+            for opname, op_keys in seed_ops:
+                wal.append(_WAL_OPS[opname], op_keys)
+            write_manifest(root, Manifest.for_generation(gen), fsync=fsync)
+        except Exception:
+            if wal is not None:
+                wal.close()
+            shutil.rmtree(root / gen_name(gen), ignore_errors=True)
+            try:
+                (root / wal_name(gen)).unlink()
+            except OSError:
+                pass
+            raise
         return _DurableState(root=root, generation=gen, wal=wal,
                              fsync=fsync)
 
@@ -834,7 +1173,8 @@ class PlexService:
         self._dur = new_dur
         if old is not None:
             old.wal.close()
-        _gc_generations(new_dur.root, new_dur.generation)
+        _gc_generations(new_dur.root, new_dur.generation,
+                        self.keep_generations)
 
     def save(self, root, *, fsync: bool = True) -> pathlib.Path:
         """Persist the current (snapshot, delta) state under ``root`` and
@@ -861,7 +1201,7 @@ class PlexService:
 
     @classmethod
     def open(cls, root, *, backend: str = "jnp", durable: bool = True,
-             fsync: bool = True, verify: bool = False,
+             fsync: bool = True, verify: bool = False, recover: bool = True,
              **kw) -> "PlexService":
         """Warm-start a service from a persisted directory in load time.
 
@@ -873,18 +1213,48 @@ class PlexService:
         segment is reused. ``durable=True`` (default) keeps the service
         attached: subsequent updates append to the recovered WAL and
         merges rotate generations. ``load_s`` records the total open wall
-        time (map + replay)."""
+        time (map + replay).
+
+        Last-known-good recovery (``recover=True``, the default): when
+        the manifest is corrupt or the committed generation fails
+        validation (header, CRC, plane mapping), the bad generation is
+        moved to ``root/quarantine/`` and the open falls back generation
+        by generation to the newest older one that validates (retained
+        on disk by serving with ``keep_generations > 1``); a durable open
+        then re-commits the manifest at the recovered generation.
+        ``NoServableGenerationError`` means every candidate failed;
+        ``FileNotFoundError`` still means the directory was never
+        published to. ``recover=False`` restores strict fail-fast
+        behaviour."""
         t0 = time.perf_counter()
         root = pathlib.Path(root)
-        man = read_manifest(root)
-        if man is None:
+        last_err: BaseException | None = None
+        try:
+            man = read_manifest(root)
+        except CorruptManifestError as e:
+            if not recover:
+                raise
+            log.warning("open(%s): manifest corrupt (%s); falling back to "
+                        "the newest on-disk generation", root, e)
+            last_err = e
+            man = None
+        if man is None and last_err is None:
             raise FileNotFoundError(f"no committed manifest under {root}")
-        for p in sorted(root.glob("gen-*")):
-            if p.is_dir() and p.name != man.snapshot:
-                log.warning("open(%s): discarding uncommitted generation %s",
-                            root, p.name)
+        gens = sorted((g for p in root.glob("gen-*")
+                       if p.is_dir() and (g := _gen_num(p)) is not None),
+                      reverse=True)
+        if man is not None:
+            for g in gens:
+                if g > man.generation:
+                    log.warning("open(%s): discarding uncommitted "
+                                "generation %s", root, gen_name(g))
+            candidates = [man.generation] + [g for g in gens
+                                             if g < man.generation]
+        else:
+            candidates = gens
         for p in sorted(root.glob("wal-*.log")):
-            if p.name != man.wal:
+            g = _gen_num(p)
+            if man is not None and (g is None or g > man.generation):
                 log.warning("open(%s): discarding stray WAL segment %s",
                             root, p.name)
         for p in sorted(root.glob("wal-*.log.rot")):
@@ -896,13 +1266,30 @@ class PlexService:
                 p.unlink()
             except OSError:  # pragma: no cover
                 pass
-        snap = load_snapshot(root / man.snapshot, verify=verify)
+        snap = None
+        chosen = -1
+        for g in candidates:
+            gdir = root / gen_name(g)
+            try:
+                snap = load_snapshot(gdir, verify=verify)
+                chosen = g
+                break
+            except Exception as e:
+                if not recover:
+                    raise
+                last_err = e
+                log.warning("open(%s): generation %s failed validation "
+                            "(%r); quarantining and falling back", root,
+                            gen_name(g), e)
+                _quarantine(root, gdir, root / wal_name(g))
+        if snap is None:
+            raise NoServableGenerationError(root, last_err)
         svc = cls(None, backend=backend, _snapshot=snap, **kw)
-        wal_path = root / man.wal
+        wal_path = root / wal_name(chosen)
         records, valid, discarded = WriteAheadLog.replay(wal_path)
         if discarded:
             log.warning("open(%s): WAL %s: discarded %d trailing byte(s) "
-                        "past the last valid record", root, man.wal,
+                        "past the last valid record", root, wal_path.name,
                         discarded)
         # replay, coalescing consecutive same-op records first: only the
         # insert/delete *interleaving* is order-sensitive, and each delta
@@ -916,6 +1303,12 @@ class PlexService:
             else:
                 delta.delete(op_keys)
         if durable:
+            if man is None or chosen != man.generation:
+                # recovery demoted the store to an older generation:
+                # re-commit the manifest there so appends and rotations
+                # bind to the generation actually being served
+                write_manifest(root, Manifest.for_generation(chosen),
+                               fsync=fsync)
             if wal_path.exists() and valid > 0:
                 # valid > 0 implies the segment's magic verified; truncate
                 # the torn tail (if any) and append after the good prefix
@@ -926,11 +1319,11 @@ class PlexService:
                 # header would make every new record unrecoverable, so
                 # start a fresh segment instead
                 log.warning("open(%s): WAL %s %s; starting a fresh segment",
-                            root, man.wal,
+                            root, wal_path.name,
                             "has an invalid header" if wal_path.exists()
                             else "is missing")
                 wal = WriteAheadLog.create(wal_path, fsync=fsync)
-            svc._dur = _DurableState(root=root, generation=man.generation,
+            svc._dur = _DurableState(root=root, generation=chosen,
                                      wal=wal, fsync=fsync)
         svc.load_s = time.perf_counter() - t0
         return svc
@@ -948,12 +1341,25 @@ class PlexService:
 
     def close(self) -> None:
         """Drain outstanding work and release the WAL handle (the durable
-        directory stays openable; an in-memory service just drains)."""
+        directory stays openable; an in-memory service just drains).
+        Idempotent, and the service is a context manager — ``with
+        PlexService(...) as svc:`` closes on exit even when the body
+        raises."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._cancel_timer()
             self.drain()
             if self._dur is not None:
                 self._dur.wal.close()
                 self._dur = None
+
+    def __enter__(self) -> "PlexService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     # -- continuous-stream queue --------------------------------------------
     def submit(self, q: np.ndarray) -> LookupTicket:
@@ -965,20 +1371,43 @@ class PlexService:
         waited ``max_delay_s`` — enforced by a background timer thread, so
         the deadline holds even when no further submit/drain call arrives.
         Uses the stacked jnp device path; when that path (or the jnp
-        backend) is unavailable the ticket is filled synchronously."""
+        backend) is unavailable the ticket is filled synchronously.
+
+        Admission control (``max_queue > 0``): a submit that would push
+        the queue past the bound is refused — ``overflow="reject"``
+        raises ``QueueFullError`` here, ``overflow="shed"`` returns a
+        ticket carrying that error instead (raised by ``result()``) —
+        so a wedged consumer degrades into fast typed failures, never
+        unbounded memory growth."""
         q = np.ascontiguousarray(q, dtype=np.uint64)
         ticket = LookupTicket(self, q.size)
         if q.size == 0:
             return ticket
         with self._lock:
+            if self.max_queue and self._q_len + q.size > self.max_queue:
+                err = QueueFullError(
+                    f"submit: queue holds {self._q_len} of "
+                    f"{self.max_queue} lanes; {q.size} more would exceed "
+                    "the bound")
+                self.stats.shed_queries += q.size
+                self._note_error(err)
+                if self.overflow == "reject":
+                    raise err
+                ticket._error = err        # shed: the ticket carries it
+                ticket._filled = q.size
+                return ticket
             # capture the stacked path under the lock: mutations hold the
             # same lock, so the queued dispatch can never pair this
             # snapshot's planes with a different epoch's delta. The routed
             # mesh path fills tickets synchronously (its host binning is
             # per-batch; queue formation stays a single-device feature)
-            st = (self.stacked_impl()
-                  if get_backend(self.default_backend).stacked_factory
-                  is not None and self._state.router is None else None)
+            try:
+                st = (self.stacked_impl()
+                      if get_backend(self.default_backend).stacked_factory
+                      is not None and self._state.router is None else None)
+            except Exception as e:      # factory fault: degrade to sync
+                self._note_error(e)
+                st = None
             if st is None:
                 ticket._out[:] = self.lookup(q)
                 ticket._filled = q.size
@@ -1014,7 +1443,9 @@ class PlexService:
     def _deadline_flush(self) -> None:
         """Timer-thread entry: flush (and drain) the queued remainder once
         its deadline has expired, filling the pending tickets without any
-        further caller action; re-arm when woken early."""
+        further caller action; re-arm when woken early. Failures degrade
+        through the fallback chain and park on tickets — an exception may
+        never escape and kill the timer thread silently."""
         with self._lock:
             self._timer = None
             if not self._q_len:
@@ -1023,7 +1454,15 @@ class PlexService:
             if age < self.max_delay_s:
                 self._arm_timer(self.max_delay_s - age)
                 return
-            self._flush_partial(self.stacked_impl())
+            try:
+                st = self.stacked_impl()
+            except Exception as e:
+                self._note_error(e)
+                st = None
+            if st is None:
+                self._fill_queue_sync()
+            else:
+                self._flush_partial(st)
             self._drain_outstanding()
 
     def _take_block(self, want: int) -> tuple[np.ndarray, list, int]:
@@ -1050,12 +1489,55 @@ class PlexService:
                               filled: int) -> None:
         if filled < self.block:
             buf[filled:] = buf[filled - 1]
-        qh, ql = split_u64(buf)
-        res = self._dispatch_planes(st, qh, ql, filled,
-                                    self._delta_view(self._state))
-        self._outstanding.append((res, pieces, self.stats.epoch))
+        try:
+            qh, ql = split_u64(buf)
+            res = self._dispatch_planes(st, qh, ql, filled,
+                                        self._delta_view(self._state))
+        except Exception as e:
+            # failed async dispatch: answer this block synchronously
+            # through the fallback chain (same result, degraded latency)
+            self.stats.backend_failures += 1
+            self._note_error(e)
+            self._record_breaker(self._breaker(self.default_backend),
+                                 False, e)
+            self._fill_pieces_fallback(buf, pieces, filled)
+            return
+        self._outstanding.append((res, buf, filled, pieces,
+                                  self.stats.epoch))
         self.stats.batches += 1
         self.stats.padded_lanes += self.block - filled
+
+    def _fill_pieces_fallback(self, buf: np.ndarray, pieces: list,
+                              filled: int) -> None:
+        """Answer one failed queue block synchronously via ``lookup``'s
+        fallback chain and fill its ticket pieces; when even the chain is
+        exhausted the error parks on each ticket (raised by ``result()``,
+        never a hang, never partial garbage)."""
+        try:
+            out = self.lookup(buf[:filled])
+        except Exception as e:
+            for ticket, src, dst, cnt in pieces:
+                ticket._error = e
+                ticket._filled += cnt
+            return
+        for ticket, src, dst, cnt in pieces:
+            ticket._out[dst:dst + cnt] = out[src:src + cnt]
+            ticket._filled += cnt
+
+    def _fill_queue_sync(self) -> None:
+        """Last-resort queue path (lock held): the stacked pipeline could
+        not be built at all, so pop every queued chunk and answer it
+        synchronously through the fallback chain; chain-exhausted
+        failures park on the tickets."""
+        while self._q_chunks:
+            ticket, arr, consumed, _ = self._q_chunks.popleft()
+            rest = arr[consumed:]
+            self._q_len -= rest.size
+            try:
+                ticket._out[consumed:] = self.lookup(rest)
+            except Exception as e:
+                ticket._error = e
+            ticket._filled += rest.size
 
     def _flush_full(self, st) -> None:
         while self._q_len >= self.block:
@@ -1068,29 +1550,64 @@ class PlexService:
             buf, pieces, filled = self._take_block(self._q_len)
             self._dispatch_queue_block(st, buf, pieces, filled)
 
-    def _drain_outstanding(self) -> None:
+    def _drain_outstanding(self, deadline: float | None = None) -> None:
         """Sync every in-flight queued batch and fill its tickets (lock
-        held by the caller)."""
-        if not self._outstanding:
-            return
-        for res, pieces, epoch in self._outstanding:
-            arr = np.asarray(res.out)       # sync
+        held by the caller). A batch whose sync fails is recomputed
+        through the fallback chain; ``deadline`` bounds the blocking
+        syncs — on expiry ``TimeoutError`` propagates with the remaining
+        batches left outstanding for a later drain."""
+        while self._outstanding:
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"drain: deadline expired with "
+                    f"{len(self._outstanding)} batch(es) still in flight")
+            res, buf, filled, pieces, epoch = self._outstanding.pop(0)
+            try:
+                arr = np.asarray(res.out)       # sync
+            except Exception as e:
+                self.stats.backend_failures += 1
+                self._note_error(e)
+                self._record_breaker(self._breaker(self.default_backend),
+                                     False, e)
+                self._fill_pieces_fallback(buf, pieces, filled)
+                self.stats.note_drained(1)
+                continue
             for ticket, src, dst, cnt in pieces:
                 ticket._out[dst:dst + cnt] = arr[src:src + cnt]
                 ticket._filled += cnt
             self._note_synced(res, epoch)
-        self.stats.note_drained(len(self._outstanding))
-        self._outstanding.clear()
+            self.stats.note_drained(1)
 
-    def drain(self) -> None:
+    def drain(self, timeout: float | None = None) -> None:
         """Flush the queued sub-block remainder and sync every in-flight
         batch, filling all pending tickets. The service's single blocking
-        point: everything before it is async dispatch."""
-        with self._lock:
+        point: everything before it is async dispatch. ``timeout`` bounds
+        the whole call — both the lock acquisition (a wedged writer) and
+        the per-batch syncs check the deadline and raise ``TimeoutError``
+        instead of blocking forever; un-synced batches stay outstanding
+        for the next drain."""
+        deadline = None if timeout is None \
+            else time.monotonic() + float(timeout)
+        if timeout is None:
+            self._lock.acquire()
+        elif not self._lock.acquire(timeout=float(timeout)):
+            raise TimeoutError(
+                f"drain: service lock not acquired within {timeout}s")
+        try:
             self._cancel_timer()
             if self._q_len:
-                self._flush_partial(self.stacked_impl())
-            self._drain_outstanding()
+                try:
+                    st = self.stacked_impl()
+                except Exception as e:
+                    self._note_error(e)
+                    st = None
+                if st is None:
+                    self._fill_queue_sync()
+                else:
+                    self._flush_partial(st)
+            self._drain_outstanding(deadline)
+        finally:
+            self._lock.release()
 
     def _warm_stacked(self, snap: Snapshot, delta_cap: int | None,
                       backend: str | None = None) -> bool:
@@ -1122,19 +1639,29 @@ class PlexService:
         take in this epoch: the delta-free pipeline and the merged pipeline
         at the standing delta capacity — so neither the first update nor a
         queue flush on the deadline timer thread ever hits a cold
-        compile."""
+        compile. Best-effort: a backend whose warm dispatch fails is left
+        cold (noted in ``health()``'s error journal) — the serving chain
+        handles the failure properly at lookup time, so warmup must never
+        crash what degraded serving would survive."""
         backend = backend or self.default_backend
-        if get_backend(backend).stacked_factory is not None:
-            state = self._state
-            dv = self._delta_view(state)
-            cap = dv.cap if dv is not None else self._delta_capacity
-            if state.router is not None and backend == self.default_backend:
-                state.router.warmup(np.uint64(state.snapshot.keys[0]), cap)
-                return
-            if self._warm_stacked(state.snapshot, cap, backend):
-                return
-        for shard in self.shards:
-            shard.warmup(backend)
+        try:
+            if get_backend(backend).stacked_factory is not None:
+                state = self._state
+                dv = self._delta_view(state)
+                cap = dv.cap if dv is not None else self._delta_capacity
+                if state.router is not None and \
+                        backend == self.default_backend:
+                    state.router.warmup(np.uint64(state.snapshot.keys[0]),
+                                        cap)
+                    return
+                if self._warm_stacked(state.snapshot, cap, backend):
+                    return
+            for shard in self.shards:
+                shard.warmup(backend)
+        except Exception as e:
+            self._note_error(e)
+            log.warning("warmup: backend %r failed (%s); left cold — the "
+                        "fallback chain covers it at lookup time", backend, e)
 
     # -- measurement ---------------------------------------------------------
     def throughput(self, q: np.ndarray, backends: Sequence[str] = BACKENDS,

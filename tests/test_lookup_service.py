@@ -135,15 +135,17 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     rows = sb.run()
     assert any(r.startswith("serve,tiny,") for r in rows)
     records = json.loads((tmp_path / "BENCH_lookup.json").read_text())
-    # one uniform record per backend + zipf + update_mix + cold_vs_warm
-    # + one mesh_scale record per plan span the host's devices allow
+    # one uniform record per backend + zipf + update_mix + degraded
+    # + cold_vs_warm + one mesh_scale record per plan span the host's
+    # devices allow
     import jax
     n_mesh = sum(1 for n in sb.MESH_SCALE_DEVS if n <= len(jax.devices()))
-    assert len(records) == len(BACKENDS) + 3 + n_mesh
+    assert len(records) == len(BACKENDS) + 4 + n_mesh
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
     extra = {"zipf": {"cache_hit_rate"},
              "update_mix": {"write_frac", "merges"},
+             "degraded": {"fallback_backend"},
              "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"},
              "mesh_scale": {"n_devices", "n_active"}}
     for rec in records:
@@ -157,6 +159,10 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert um[0]["merges"] >= 0
     # merges are build work: the build_s column carries the rebuild time
     assert um[0]["build_s"] > 0
+    dg = [r for r in records if r["workload"] == "degraded"]
+    assert len(dg) == 1 and dg[0]["backend"] == "jnp"
+    # degraded serving is the fallback backend's cost, exact by assertion
+    assert dg[0]["fallback_backend"] == "numpy"
     cw = [r for r in records if r["workload"] == "cold_vs_warm"]
     assert len(cw) == 1
     assert cw[0]["load_s"] > 0 and cw[0]["first_batch_s"] > 0
