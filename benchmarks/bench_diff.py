@@ -1,17 +1,22 @@
-"""Perf-trajectory diff: flag ns/lookup regressions between two
-``BENCH_lookup.json`` files.
+"""Perf-trajectory diff: flag perf regressions between two benchmark
+record files (``BENCH_lookup.json`` serve records, ``BENCH_build.json``
+build-throughput records).
 
     python -m benchmarks.bench_diff OLD.json NEW.json [--threshold 0.15]
 
 Records are matched on (dataset, n, eps, backend, workload, write_frac,
-n_devices, fallback_backend — the last three only set for
-``update_mix`` / ``mesh_scale`` / ``degraded`` records respectively, so
-differently-mixed, differently-spanned, or differently-degraded sweeps
-never collide); a matched record whose ``ns_per_lookup`` grew by more than
-``--threshold`` (default 15%) is a regression and the exit code is
-non-zero. Records present on only one side (new datasets, schema-additive
-fields, removed sweeps) are listed but never fail the diff — the
-trajectory file is allowed to grow.
+n_devices, fallback_backend, workers, n_shards — the last five only set
+for ``update_mix`` / ``mesh_scale`` / ``degraded`` / ``build_scale``
+records respectively, so differently-mixed, differently-spanned,
+differently-degraded, or differently-parallel sweeps never collide).
+
+The comparison is **direction-aware** per record: serve records carry
+``ns_per_lookup`` (lower is better), build records carry ``keys_per_s``
+(higher is better); a matched record whose metric moved the *wrong* way by
+more than ``--threshold`` (default 15%) is a regression and the exit code
+is non-zero. Records present on only one side (new datasets,
+schema-additive fields, removed sweeps) are listed but never fail the
+diff — the trajectory file is allowed to grow.
 
 CI wires this against the previous run's cached artifact when one exists
 (see ``.github/workflows/ci.yml``); it is also handy locally:
@@ -29,11 +34,27 @@ import sys
 
 Key = tuple
 
+# (json field, unit label, higher_is_better) in probe order: every record
+# carries exactly one of these
+_METRICS = (("ns_per_lookup", "ns/lookup", False),
+            ("keys_per_s", "keys/s", True))
+
 
 def _key(rec: dict) -> Key:
     return (rec["dataset"], rec["n"], rec["eps"], rec["backend"],
             rec.get("workload", "uniform"), rec.get("write_frac", -1.0),
-            rec.get("n_devices", -1), rec.get("fallback_backend", ""))
+            rec.get("n_devices", -1), rec.get("fallback_backend", ""),
+            rec.get("workers", -1), rec.get("n_shards", -1))
+
+
+def _metric(rec: dict) -> tuple[float, str, bool]:
+    """-> (value, unit, higher_is_better) for whichever metric the record
+    carries."""
+    for field, unit, higher in _METRICS:
+        if field in rec:
+            return float(rec[field]), unit, higher
+    raise KeyError(f"record carries none of "
+                   f"{[f for f, _, _ in _METRICS]}: {sorted(rec)}")
 
 
 def load(path: str | pathlib.Path) -> dict[Key, dict]:
@@ -50,22 +71,28 @@ def diff(old: dict[Key, dict], new: dict[Key, dict],
     lines: list[str] = []
     regressions: list[str] = []
     for key in sorted(set(old) & set(new)):
-        o = float(old[key]["ns_per_lookup"])
-        n = float(new[key]["ns_per_lookup"])
+        o, unit, higher = _metric(old[key])
+        n, _, _ = _metric(new[key])
         ratio = n / o if o > 0 else float("inf")
+        # normalise to "worse_ratio > 1 means regression" for either
+        # direction: lower-is-better regresses when the value grows,
+        # higher-is-better regresses when it shrinks
+        worse = (1.0 / ratio if ratio > 0 else float("inf")) \
+            if higher else ratio
         tag = ""
-        if ratio > 1.0 + threshold:
+        if worse > 1.0 + threshold:
             tag = "  REGRESSION"
-        elif ratio < 1.0 - threshold:
+        elif worse < 1.0 - threshold:
             tag = "  improved"
         line = (f"{'/'.join(str(k) for k in key)}: "
-                f"{o:.1f} -> {n:.1f} ns/lookup ({ratio:.2f}x){tag}")
+                f"{o:.1f} -> {n:.1f} {unit} ({ratio:.2f}x){tag}")
         lines.append(line)
         if tag == "  REGRESSION":
             regressions.append(line)
     for key in sorted(set(new) - set(old)):
+        val, unit, _ = _metric(new[key])
         lines.append(f"{'/'.join(str(k) for k in key)}: new record "
-                     f"({float(new[key]['ns_per_lookup']):.1f} ns/lookup)")
+                     f"({val:.1f} {unit})")
     for key in sorted(set(old) - set(new)):
         lines.append(f"{'/'.join(str(k) for k in key)}: dropped")
     return lines, regressions
@@ -76,7 +103,8 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("old")
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=0.15,
-                    help="relative ns/lookup growth that fails (default .15)")
+                    help="relative metric worsening that fails (default "
+                         ".15; direction-aware per record)")
     args = ap.parse_args(argv)
     lines, regressions = diff(load(args.old), load(args.new), args.threshold)
     print("\n".join(lines) if lines else "no comparable records")

@@ -1,0 +1,136 @@
+"""`build_scale` section: parallel sharded build throughput -> BENCH_build.json.
+
+Measures ``Snapshot.build(..., workers=N)`` — the process-pool fan-out of
+the per-shard spline fit + auto-tune + radix/CHT build — at workers =
+1/2/4/8 over ``n_shards=8`` sharded datasets, and asserts every parallel
+build is **bit-identical** to the serial one (same shard planes, same
+tuning decisions, same persisted snapshot bytes modulo the wall-clock
+``build_s`` header field).
+
+``BENCH_build.json`` uses a schema-stable record layout (mirroring
+``BENCH_lookup.json``) so ``benchmarks.bench_diff`` can gate
+build-throughput regressions across PRs on the higher-is-better
+``keys_per_s`` metric:
+
+    {"schema": 1, "workload": "build_scale", "dataset": ..., "n": ...,
+     "eps": ..., "backend": "host", "n_shards": 8, "workers": ...,
+     "build_s": ..., "keys_per_s": ..., "spline_s": ..., "tune_s": ...,
+     "layer_s": ..., "identical_to_serial": true, "cpus": ...}
+
+``cpus`` records the container's CPU count: the workers=4 speedup target
+(>= 2x, ISSUE 8) is only *physically reachable* with >= 4 cores — on a
+1-CPU host a process pool adds overhead instead, so absolute speedups are
+read against ``cpus`` and CI gates on the *relative* trajectory between
+runs on the same hardware, never on an absolute multiplier.
+
+Env knobs: BENCH_BUILD_N (keys per dataset, default 1,000,000 — the
+ISSUE's measurement point; ``--quick`` CI runs inherit the small BENCH_N),
+BENCH_BUILD_EPS (default 64).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.index import Snapshot
+from repro.data import generate
+
+from .common import BENCH_N
+
+OUT_PATH = pathlib.Path("BENCH_build.json")
+
+N = int(os.environ.get("BENCH_BUILD_N",
+                       BENCH_N if "BENCH_N" in os.environ else 1_000_000))
+EPS = int(os.environ.get("BENCH_BUILD_EPS", 64))
+WORKERS = (1, 2, 4, 8)
+N_SHARDS = 8
+DATASETS = ("amzn", "osm")     # one easy + one hard distribution
+
+
+def _layer_arr(px) -> np.ndarray:
+    return px.layer.table if hasattr(px.layer, "table") else px.layer.cells
+
+
+def _planes_equal(a: Snapshot, b: Snapshot) -> bool:
+    """Bit-identity of everything the build determines: shard table,
+    per-shard spline planes, tuning decision, and radix/CHT layer."""
+    if not np.array_equal(a.offsets, b.offsets):
+        return False
+    for x, y in zip(a.shards, b.shards):
+        px, py = x.plex, y.plex
+        if (px.tuning.kind, px.tuning.r, px.tuning.delta) != \
+                (py.tuning.kind, py.tuning.r, py.tuning.delta):
+            return False
+        if not (np.array_equal(px.spline.keys, py.spline.keys)
+                and np.array_equal(px.spline.positions, py.spline.positions)
+                and np.array_equal(_layer_arr(px), _layer_arr(py))):
+            return False
+    return True
+
+
+def _persisted_bytes_equal(serial: Snapshot, par: Snapshot) -> bool:
+    """Whole-file byte identity of the two snapshots' persisted form.
+    ``build_s`` is wall-clock metadata embedded in the header (never index
+    content), so it is equalised before the comparison."""
+    from repro.persist.format import save_snapshot
+    par.build_s = serial.build_s
+    with tempfile.TemporaryDirectory() as td:
+        root = pathlib.Path(td)
+        save_snapshot(root / "a", serial, fsync=False)
+        save_snapshot(root / "b", par, fsync=False)
+        return (root / "a/snapshot.plex").read_bytes() == \
+            (root / "b/snapshot.plex").read_bytes()
+
+
+def run(out_rows: list[str] | None = None) -> list[str]:
+    rows = out_rows if out_rows is not None else []
+    rows.append("build_scale,dataset,n,workers,build_s,keys_per_s,"
+                "spline_s,tune_s,layer_s,identical_to_serial")
+    records: list[dict] = []
+    cpus = os.cpu_count() or 1
+    for dname in DATASETS:
+        keys = generate(dname, N, seed=0)
+        serial: Snapshot | None = None
+        for w in WORKERS:
+            t0 = time.perf_counter()
+            snap = Snapshot.build(keys.copy(), EPS, n_shards=N_SHARDS,
+                                  workers=w)
+            build_s = time.perf_counter() - t0
+            if w == 1:
+                serial = snap
+                ident = True
+            else:
+                ident = _planes_equal(serial, snap)
+                if w == max(WORKERS):
+                    ident = ident and _persisted_bytes_equal(serial, snap)
+                assert ident, (f"parallel build (workers={w}) diverged "
+                               f"from serial on {dname}")
+            st = snap.build_stats
+            rows.append(f"build_scale,{dname},{keys.size},{w},"
+                        f"{build_s:.4f},{keys.size / build_s:.0f},"
+                        f"{st.spline_s:.4f},{st.tune_s:.4f},"
+                        f"{st.layer_s:.4f},{ident}")
+            records.append({
+                "schema": 1, "workload": "build_scale", "dataset": dname,
+                "n": int(keys.size), "eps": EPS, "backend": "host",
+                "n_shards": N_SHARDS, "workers": w,
+                "build_s": round(build_s, 4),
+                "keys_per_s": round(keys.size / build_s, 1),
+                "spline_s": round(st.spline_s, 4),
+                "tune_s": round(st.tune_s, 4),
+                "layer_s": round(st.layer_s, 4),
+                "identical_to_serial": bool(ident),
+                "cpus": cpus,
+            })
+    OUT_PATH.write_text(json.dumps(records, indent=1))
+    rows.append(f"# build_scale wrote {OUT_PATH} ({len(records)} records)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -2,16 +2,28 @@
 
 PLEX's build time INCLUDES auto-tuning (the paper's headline fairness point:
 RS/CHT/RMI were grid-searched offline). Emits CSV:
-dataset,index,config,build_s,size_bytes."""
+dataset,index,config,build_s,size_bytes,spline_s,tune_s,layer_s — the
+per-phase columns come from ``BuildStats`` and are blank for baseline
+indexes that don't break their build into PLEX's phases."""
 from __future__ import annotations
 
 from .common import (DuplicateKeysError, datasets, index_grid, queries,
                      timed_build, verify)
 
 
+def _phase_cols(idx) -> str:
+    """spline_s,tune_s,layer_s from the index's ``BuildStats`` (PLEX), or
+    empty columns for baselines without phase accounting."""
+    st = getattr(idx, "stats", None)
+    if st is None or not hasattr(st, "spline_s"):
+        return ",,"
+    return f"{st.spline_s:.4f},{st.tune_s:.4f},{st.layer_s:.4f}"
+
+
 def run(out_rows: list[str] | None = None) -> list[str]:
     rows = out_rows if out_rows is not None else []
-    rows.append("fig2,dataset,index,config,build_s,size_bytes")
+    rows.append("fig2,dataset,index,config,build_s,size_bytes,"
+                "spline_s,tune_s,layer_s")
     for dname, keys in datasets().items():
         q = queries(keys)
         for iname, builder, grid in index_grid():
@@ -20,11 +32,12 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                 try:
                     idx, dt = timed_build(builder, keys, **kw)
                 except DuplicateKeysError:
-                    rows.append(f"fig2,{dname},{iname},{tag},DUPLICATE_KEYS,")
+                    rows.append(
+                        f"fig2,{dname},{iname},{tag},DUPLICATE_KEYS,,,,")
                     continue
                 verify(idx, keys, q)
                 rows.append(f"fig2,{dname},{iname},{tag},{dt:.4f},"
-                            f"{idx.size_bytes}")
+                            f"{idx.size_bytes},{_phase_cols(idx)}")
     return rows
 
 

@@ -4,11 +4,13 @@
 
 Sections: fig2 (build/size), fig3 (lookup/size), autotune (vs grid search),
 kernel (device lookup path), serve (PlexService per-backend throughput),
-roofline (from dry-run artifacts, if present).
+build_scale (parallel sharded build throughput), roofline (from dry-run
+artifacts, if present).
 
 Each section's CSV rows are also written to ``BENCH_<section>.json`` so CI
-can archive per-PR artifacts; the serve section additionally emits the
-schema-stable ``BENCH_lookup.json`` perf-trajectory file.
+can archive per-PR artifacts; the serve and build_scale sections
+additionally emit the schema-stable ``BENCH_lookup.json`` /
+``BENCH_build.json`` perf-trajectory files.
 """
 from __future__ import annotations
 
@@ -26,15 +28,15 @@ def main() -> None:
                     help="small N for CI (BENCH_N=60000)")
     ap.add_argument("--only", default=None,
                     help="comma-list: fig2,fig3,autotune,kernel,serve,"
-                         "roofline")
+                         "build_scale,roofline")
     args = ap.parse_args()
     if args.quick and "BENCH_N" not in os.environ:
         os.environ["BENCH_N"] = "60000"
         os.environ["BENCH_QUERIES"] = "40000"
 
     # imports AFTER env so common.py picks BENCH_N up
-    from . import autotune_grid, fig2_build, fig3_lookup, kernel_bench
-    from . import roofline, serve_bench
+    from . import autotune_grid, build_scale, fig2_build, fig3_lookup
+    from . import kernel_bench, roofline, serve_bench
 
     sections = {
         "fig2": fig2_build.run,
@@ -42,6 +44,7 @@ def main() -> None:
         "autotune": autotune_grid.run,
         "kernel": kernel_bench.run,
         "serve": serve_bench.run,
+        "build_scale": build_scale.run,
         "roofline": roofline.run,
     }
     wanted = args.only.split(",") if args.only else list(sections)

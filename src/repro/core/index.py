@@ -232,12 +232,23 @@ class Snapshot:
     def build(cls, keys: np.ndarray, eps: int, *, n_shards: int | None = None,
               backend: str = "numpy", block: int = 512,
               devices: Sequence | None = None, epoch: int = 0,
-              **build_kw) -> "Snapshot":
+              workers: int | None = None, pool: str = "process",
+              mp_context: Any = None, **build_kw) -> "Snapshot":
         """Host-side sharded build (the paper's single-pass build per shard).
 
-        ``devices``, when given, places shard planes round-robin. This runs
-        off any serving hot path: an updatable service keeps answering from
-        the previous snapshot until the new one is complete.
+        ``devices``, when given, places shard planes round-robin (a
+        single-shard build pins to ``devices[0]``). This runs off any
+        serving hot path: an updatable service keeps answering from the
+        previous snapshot until the new one is complete.
+
+        ``workers > 1`` fans the independent per-shard ``build_plex``
+        calls over a process pool (``core.parallel_build``): the key array
+        crosses into the workers by memmap / copy-on-write fork / shared
+        memory — never pickled — and the result is bit-identical to the
+        serial build (same planes, same persisted bytes), only the
+        schedule changes. ``pool="thread"`` swaps in a thread pool (useful
+        when process start-up would dominate). Per-shard phase timings are
+        aggregated on ``Snapshot.build_stats`` either way.
 
         Ownership: the key array is adopted and **frozen in place**
         (``writeable = False``) rather than copied — at the 200M-key scale
@@ -255,14 +266,15 @@ class Snapshot:
             n_shards = -(-keys.size // SHARD_MAX_KEYS)
         offsets = shard_offsets(keys, max(int(n_shards), 1))
         t0 = time.perf_counter()
+        from .parallel_build import build_shard_plexes
+        plexes = build_shard_plexes(
+            keys, offsets, eps, workers=int(workers or 1), pool=pool,
+            mp_context=mp_context, **build_kw)
         shards = []
-        for s, off in enumerate(offsets):
-            end = offsets[s + 1] if s + 1 < len(offsets) else keys.size
-            dev = (devices[s % len(devices)]
-                   if devices and len(offsets) > 1 else None)
-            shards.append(LearnedIndex.build(
-                keys[off:end], eps, backend=backend, block=block,
-                device=dev, **build_kw))
+        for s, px in enumerate(plexes):
+            dev = devices[s % len(devices)] if devices else None
+            shards.append(LearnedIndex(plex=px, default_backend=backend,
+                                       block=block, device=dev))
         build_s = time.perf_counter() - t0
         return cls(keys, eps, offsets, shards, build_s=build_s, epoch=epoch)
 
@@ -278,6 +290,16 @@ class Snapshot:
     @property
     def size_bytes(self) -> int:
         return sum(s.size_bytes for s in self.shards)
+
+    @property
+    def build_stats(self):
+        """Per-phase build timings aggregated over the shards
+        (``BuildStats``: spline fit / auto-tune / layer build CPU-seconds).
+        Unlike ``build_s`` (the shard loop's wall time) these sum *index
+        work*, so ``build_stats.total_s / build_s`` is the realised build
+        parallelism. Loaded snapshots report zeros (nothing was built)."""
+        from .plex import BuildStats
+        return BuildStats.aggregate([s.plex.stats for s in self.shards])
 
     @property
     def name(self) -> str:

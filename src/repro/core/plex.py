@@ -67,6 +67,20 @@ class BuildStats:
     layer_s: float
     total_s: float
 
+    @classmethod
+    def aggregate(cls, stats: "list[BuildStats]") -> "BuildStats":
+        """Sum per-shard phase timings into one build-wide record.
+
+        The totals are CPU-seconds *of index work*, not wall time: a
+        parallel sharded build overlaps the shards, so its wall time
+        (``Snapshot.build_s``) is lower than ``total_s`` — the ratio is
+        the realised build parallelism. Loaded snapshots carry zeroed
+        stats, so the aggregate degrades to zeros instead of lying."""
+        return cls(spline_s=sum(s.spline_s for s in stats),
+                   tune_s=sum(s.tune_s for s in stats),
+                   layer_s=sum(s.layer_s for s in stats),
+                   total_s=sum(s.total_s for s in stats))
+
 
 def freeze_arrays(*arrays: np.ndarray) -> None:
     """Mark numpy arrays immutable (``flags.writeable = False``).

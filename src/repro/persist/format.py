@@ -172,6 +172,156 @@ def save_snapshot(gen_dir: str | pathlib.Path, snap: Snapshot, *,
     return path
 
 
+class SnapshotWriter:
+    """Incremental writer for the v1 snapshot format — the streamed half
+    of the parallel build (``core.parallel_build.build_generation``).
+
+    ``save_snapshot`` needs the complete snapshot in memory to lay the
+    header down first; at SOSD scale the build should instead append each
+    shard's planes to disk *as it completes* and drop the shard index
+    immediately. This writer makes that possible while keeping the file
+    format identical: a header region of ``reserve`` bytes is left at the
+    front, planes are appended 64B-aligned exactly as ``save_snapshot``
+    lays them out, and ``finalize`` writes the JSON header into the
+    reserve, padding it with trailing whitespace (valid JSON; the fixed
+    header's ``hlen`` covers the padding, so ``_read_header``'s payload
+    base lands exactly on the first plane). If the directory outgrows the
+    reserve, the payload is shifted once to a larger base — correctness
+    never depends on the estimate.
+
+    The file is written as ``snapshot.plex.tmp`` and renamed at
+    ``finalize`` (same publish discipline as ``save_snapshot``; the
+    *manifest* rename remains the durability commit point). ``abort()``
+    sweeps the temp file, so a failed build leaves no partial snapshot
+    behind. Large planes (e.g. a memmapped SOSD key array) are written in
+    bounded chunks, never materialised whole.
+    """
+
+    _CHUNK = 1 << 24              # 16 MiB per write/crc chunk
+
+    def __init__(self, gen_dir: str | pathlib.Path, *,
+                 n_shards_hint: int = 0, reserve: int | None = None,
+                 fsync: bool = True):
+        self.gen_dir = pathlib.Path(gen_dir)
+        self.gen_dir.mkdir(parents=True, exist_ok=True)
+        self.path = self.gen_dir / SNAPSHOT_FILE
+        self._tmp = self.path.with_suffix(".tmp")
+        self._fsync = fsync
+        if reserve is None:
+            # ~450B shard meta + 3 directory entries per shard, with margin
+            reserve = len(MAGIC) + _FIXED.size + 2048 \
+                + 1024 * max(int(n_shards_hint), 1)
+        self._base = _align(max(int(reserve), len(MAGIC) + _FIXED.size + 2))
+        self._f = open(self._tmp, "wb+")
+        self._dir: list[dict] = []
+        self._shards: list[dict] = []
+        self._rel = 0                 # aligned offset of the next plane
+        self._payload_end = 0         # actual bytes written past the base
+
+    def add_plane(self, name: str, arr: np.ndarray) -> None:
+        """Append one plane (64B-aligned, CRC'd) and its directory entry.
+        ``arr`` is streamed in chunks — a memmap is never copied whole."""
+        arr = np.asarray(arr)
+        flat = arr.reshape(-1)
+        self._f.seek(self._base + self._rel)
+        crc = 0
+        step = max(self._CHUNK // max(arr.itemsize, 1), 1)
+        for i in range(0, max(flat.size, 1), step):
+            chunk = np.ascontiguousarray(flat[i:i + step])
+            if chunk.size == 0:
+                break
+            crc = zlib.crc32(chunk, crc)
+            self._f.write(chunk)
+        self._dir.append({"name": name, "dtype": arr.dtype.str,
+                          "shape": list(arr.shape), "offset": self._rel,
+                          "nbytes": int(arr.nbytes), "crc32": crc})
+        self._payload_end = self._rel + int(arr.nbytes)
+        self._rel = _align(self._payload_end)
+
+    def add_shard(self, s: int, px: PLEX) -> None:
+        """Append shard ``s``'s planes + header metadata (shards must
+        arrive in order — the streamed build yields them that way)."""
+        if s != len(self._shards):
+            raise ValueError(f"shard {s} appended out of order "
+                             f"(expected {len(self._shards)})")
+        self._shards.append(_shard_meta(px))
+        self.add_plane(f"s{s}.spline_keys",
+                       np.ascontiguousarray(px.spline.keys, np.uint64))
+        self.add_plane(f"s{s}.spline_pos",
+                       np.ascontiguousarray(px.spline.positions, np.int64))
+        larr = (px.layer.table if isinstance(px.layer, RadixTable)
+                else px.layer.cells)
+        self.add_plane(f"s{s}.layer", np.ascontiguousarray(larr, np.uint32))
+
+    def _regrow(self, hlen: int) -> None:
+        """Shift the payload to a larger base (back-to-front so the
+        overlapping copy never clobbers unread bytes). Runs at most once
+        per file, only when the header outgrew the reserve."""
+        new_base = _align(len(MAGIC) + _FIXED.size + hlen + 1024)
+        off = self._payload_end
+        while off > 0:
+            n = min(self._CHUNK, off)
+            off -= n
+            self._f.seek(self._base + off)
+            buf = self._f.read(n)
+            self._f.seek(new_base + off)
+            self._f.write(buf)
+        self._base = new_base
+
+    def finalize(self, *, eps: int, epoch: int = 0, n_keys: int,
+                 build_s: float = 0.0) -> pathlib.Path:
+        """Write the header into the reserve and publish the file
+        (temp rename + optional fsync). The writer is closed after."""
+        header = {
+            "schema": SCHEMA_VERSION,
+            "eps": int(eps),
+            "epoch": int(epoch),
+            "build_s": float(build_s),
+            "n_keys": int(n_keys),
+            "n_shards": len(self._shards),
+            "shards": self._shards,
+            "planes": self._dir,
+        }
+        hjson = json.dumps(header, separators=(",", ":")).encode()
+        if len(MAGIC) + _FIXED.size + len(hjson) > self._base:
+            self._regrow(len(hjson))
+        # pad to the exact reserve: json.loads ignores trailing whitespace
+        # and hlen covers it, so the payload base math stays exact
+        hjson += b" " * (self._base - len(MAGIC) - _FIXED.size - len(hjson))
+        self._f.seek(0)
+        self._f.write(MAGIC)
+        self._f.write(_FIXED.pack(len(hjson), SCHEMA_VERSION,
+                                  zlib.crc32(hjson)))
+        self._f.write(hjson)
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        self._f.close()
+        os.replace(self._tmp, self.path)
+        if self._fsync:
+            fsync_dir(self.gen_dir)
+        return self.path
+
+    def abort(self) -> None:
+        """Close and sweep the temp file (no partial snapshot survives a
+        failed build). Idempotent; safe after ``finalize`` (no-op).
+        A generation directory this writer created and left empty is
+        removed too (rmdir refuses non-empty dirs, so a directory holding
+        a finalized snapshot or anything else is never touched)."""
+        try:
+            self._f.close()
+        except OSError:  # pragma: no cover
+            pass
+        try:
+            self._tmp.unlink()
+        except OSError:
+            pass
+        try:
+            self.gen_dir.rmdir()
+        except OSError:
+            pass
+
+
 def _read_header(path: pathlib.Path) -> tuple[dict, int]:
     """-> (header dict, payload base offset); raises CorruptSnapshotError."""
     try:

@@ -42,7 +42,14 @@ POINT_MANIFEST_COMMIT   ``persist.manifest.write_manifest`` before the
 POINT_PARTITION_LOAD    one device's partition load / slab build
                         (``distrib.partition`` and ``distrib.loader``);
                         ctx ``device``
-POINT_MERGE_BUILD       ``PlexService.merge`` before the snapshot rebuild
+POINT_MERGE_BUILD       ``PlexService._merge_once`` before the snapshot
+                        rebuild
+POINT_BUILD_SHARD       parallel sharded build: collecting one shard's
+                        built PLEX from the worker pool
+                        (``core.parallel_build``); ctx ``shard``
+POINT_MERGE_WORKER      the background merge worker thread, at the top of
+                        each wakeup — an uncaught trip here kills the
+                        worker itself, the "worker death" chaos case
 ======================  ====================================================
 
 The module-level ``FAULTS`` registry is what the production hooks fire
@@ -63,8 +70,9 @@ import numpy as np
 __all__ = [
     "FAULTS", "FaultRegistry", "InjectedFault", "Scenario",
     "INJECTION_POINTS", "POINT_BACKEND_DISPATCH", "POINT_BACKEND_FACTORY",
-    "POINT_MANIFEST_COMMIT", "POINT_MERGE_BUILD", "POINT_PARTITION_LOAD",
-    "POINT_SNAPSHOT_MAP", "POINT_WAL_APPEND", "POINT_WAL_FSYNC",
+    "POINT_BUILD_SHARD", "POINT_MANIFEST_COMMIT", "POINT_MERGE_BUILD",
+    "POINT_MERGE_WORKER", "POINT_PARTITION_LOAD", "POINT_SNAPSHOT_MAP",
+    "POINT_WAL_APPEND", "POINT_WAL_FSYNC",
     "always", "fail_n", "fail_once", "fire", "injected", "intermittent",
 ]
 
@@ -76,11 +84,14 @@ POINT_WAL_FSYNC = "persist.wal.fsync"
 POINT_MANIFEST_COMMIT = "persist.manifest.commit"
 POINT_PARTITION_LOAD = "distrib.partition.load"
 POINT_MERGE_BUILD = "serving.merge.build"
+POINT_BUILD_SHARD = "core.build.shard"
+POINT_MERGE_WORKER = "serving.merge.worker"
 
 INJECTION_POINTS = (
     POINT_BACKEND_FACTORY, POINT_BACKEND_DISPATCH, POINT_SNAPSHOT_MAP,
     POINT_WAL_APPEND, POINT_WAL_FSYNC, POINT_MANIFEST_COMMIT,
-    POINT_PARTITION_LOAD, POINT_MERGE_BUILD,
+    POINT_PARTITION_LOAD, POINT_MERGE_BUILD, POINT_BUILD_SHARD,
+    POINT_MERGE_WORKER,
 )
 
 

@@ -227,11 +227,24 @@ class DeltaBuffer:
         return ops
 
     # -- merge support -------------------------------------------------------
-    def logical_keys(self) -> np.ndarray:
+    def capture(self) -> _DeltaState:
+        """The currently-published immutable state bundle.
+
+        The background-merge protocol's cut point: the merge worker captures
+        the state under the service lock, then materialises/builds from it
+        *off*-lock while the writer keeps publishing newer states — the
+        captured bundle can never change underneath it. Pass it back to
+        ``logical_keys(state=...)``."""
+        return self._state
+
+    def logical_keys(self, state: _DeltaState | None = None) -> np.ndarray:
         """Materialise the logical merged key array (snapshot occurrences
         minus tombstoned runs, plus live inserts) — the input to the next
-        snapshot build. O(n) masking + one sort of the insert tail."""
-        s = self._state
+        snapshot build. O(n) masking + one sort of the insert tail.
+
+        ``state``: an earlier ``capture()``d bundle to materialise instead
+        of the live one (the off-lock background-merge path)."""
+        s = self._state if state is None else state
         snap = self._snap_keys
         if s.del_keys.size:
             edge = np.zeros(snap.size + 1, dtype=np.int64)

@@ -28,7 +28,23 @@ One serving front-end over the snapshot + delta ownership model:
   (snapshot, fresh delta) pair with a single reference assignment — the
   atomic-swap contract: a reader that captured the old state keeps a fully
   consistent index, and no reader ever observes a half-built one. Swaps
-  start a new stats epoch and a fresh hot-key cache.
+  start a new stats epoch and a fresh hot-key cache. The rebuild fans the
+  per-shard work over a process pool when ``build_workers`` is set
+  (``core.parallel_build``), bit-identical to the serial build.
+* **Background merge (opt-in).** ``merge_mode="background"`` moves the
+  whole merge cycle onto a dedicated worker thread and turns the update
+  path lock-free MPSC with respect to merging: ``insert``/``delete``
+  append to the WAL/delta and return without ever waiting on an in-flight
+  rebuild. The worker captures the delta state (plus a journal sequence
+  number) under the lock, then materialises, rebuilds, pre-warms, and
+  writes the new generation's snapshot with **no service lock held**;
+  mutations accepted meanwhile land in an op journal. Publish re-acquires
+  the lock only for the fast tail — seed a fresh WAL with the residual
+  journal, one manifest rename, replay the residual into the fresh delta,
+  and the same single ``_state`` assignment. Merge failures *and worker
+  death* (chaos point ``serving.merge.worker``) are contained exactly like
+  sync-mode failures: backoff armed, live state untouched, a fresh worker
+  starts on the next update.
 * **Single-dispatch stacked routing (jnp backend).** Shard routing, the
   radix->spline->probe pipeline, the per-shard clamp, the global-offset
   fold, and the delta fold all run inside **one** jit'd function per
@@ -147,7 +163,7 @@ from ..resilience.errors import (BackendUnavailableError, MergeFailedError,
                                  NoServableGenerationError,
                                  PartitionLoadError, QueueFullError)
 from ..resilience.faults import (FAULTS, POINT_BACKEND_DISPATCH,
-                                 POINT_MERGE_BUILD, fire)
+                                 POINT_MERGE_BUILD, POINT_MERGE_WORKER, fire)
 from .delta import DELTA_CAP_MIN, DeltaBuffer, next_pow2
 
 __all__ = ["DEFAULT_BLOCK", "DEFAULT_MERGE_THRESHOLD",
@@ -398,6 +414,8 @@ class PlexService:
                  merge_backoff_s: float = 0.05,
                  merge_backoff_cap_s: float = 5.0,
                  keep_generations: int = 1,
+                 merge_mode: str = "sync",
+                 build_workers: int | None = None,
                  _snapshot: Snapshot | None = None,
                  **build_kw):
         get_backend(backend)          # fail unknown names at construction
@@ -452,6 +470,10 @@ class PlexService:
             raise ValueError("max_queue must be >= 0 (0 = unbounded)")
         if keep_generations < 1:
             raise ValueError("keep_generations must be >= 1")
+        if merge_mode not in ("sync", "background"):
+            raise ValueError("merge_mode must be 'sync' or 'background'")
+        if build_workers is not None and int(build_workers) < 1:
+            raise ValueError("build_workers must be >= 1 (None = serial)")
         if isinstance(fallback, str) and fallback != "auto":
             raise ValueError("fallback must be 'auto', None, or a sequence "
                              "of backend names")
@@ -478,6 +500,22 @@ class PlexService:
         self._merge_retry_at = 0.0
         self._closed = False
 
+        # background-merge machinery. _merge_mutex serialises merges with
+        # each other (NOT with mutations: the lock order is _merge_mutex ->
+        # _lock, and a background merge never holds _lock across the
+        # rebuild). The op journal records every accepted mutation since
+        # the last merge capture point (background mode only), so the
+        # publish phase can replay the residual — ops accepted while the
+        # rebuild ran — into the fresh delta without ever blocking writers.
+        self.merge_mode = merge_mode
+        self.build_workers = None if build_workers is None \
+            else int(build_workers)
+        self._merge_mutex = threading.Lock()
+        self._merge_wakeup = threading.Event()
+        self._merge_worker: threading.Thread | None = None
+        self._op_seq = 0
+        self._op_journal: collections.deque = collections.deque()
+
         # fixed delta capacity: the merge threshold bounds the buffer, so
         # sizing the device view to it up front means the merged pipeline
         # compiles once per snapshot, never mid-stream on capacity growth
@@ -486,7 +524,8 @@ class PlexService:
             next_pow2(max(self.merge_threshold, 1)), DELTA_CAP_MIN)
         snap = _snapshot if _snapshot is not None else Snapshot.build(
             keys, eps, n_shards=n_shards, backend=backend,
-            block=self.block, devices=self._devices, **build_kw)
+            block=self.block, devices=self._devices,
+            workers=self.build_workers, **build_kw)
         self._state = _ServiceState(
             snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity),
             self._make_router(snap))
@@ -836,6 +875,10 @@ class PlexService:
             "fallback_lookups": int(self.stats.fallback_lookups),
             "merge_failures": int(self.stats.merge_failures),
             "merge_retry_in_s": round(retry_in, 3),
+            "merge_mode": self.merge_mode,
+            "merge_worker_alive": self._merge_worker is not None
+            and self._merge_worker.is_alive(),
+            "journal_ops": len(self._op_journal),
             "wal_bytes": int(wal_bytes),
             "last_errors": list(self._last_errors),
             "armed_faults": FAULTS.active(),
@@ -988,6 +1031,7 @@ class PlexService:
                 # state is untouched and durable >= served still holds
                 self._dur.wal.append(OP_INSERT, keys)
             n = state.delta.insert(keys)
+            self._journal_op("insert", keys)
             self.stats.inserts += n
             self._maybe_rotate_wal(state)
             self._after_update(state)
@@ -1006,6 +1050,7 @@ class PlexService:
             if self._dur is not None:
                 self._dur.wal.append(OP_DELETE, keys)
             n = state.delta.delete(keys)
+            self._journal_op("delete", keys)
             self.stats.deletes += n
             self._maybe_rotate_wal(state)
             self._after_update(state)
@@ -1034,6 +1079,16 @@ class PlexService:
         dur.wal = dur.wal.rotate(ops)
         self.stats.wal_rotations += 1
 
+    def _journal_op(self, opname: str, keys: np.ndarray) -> None:
+        """Record one accepted mutation in the op journal (lock held;
+        background mode only). The journal is the background merge's
+        residual source: ops still journaled at publish time arrived after
+        the merge's capture point and are replayed into the fresh delta."""
+        if self.merge_mode != "background":
+            return
+        self._op_seq += 1
+        self._op_journal.append((self._op_seq, opname, keys.copy()))
+
     def _after_update(self, state: _ServiceState) -> None:
         # no cache invalidation needed: cached entries hold delta-
         # independent snapshot ranks (the delta folds in after resolution)
@@ -1042,6 +1097,12 @@ class PlexService:
         if self._consec_merge_failures and \
                 time.monotonic() < self._merge_retry_at:
             return    # backing off: the delta keeps serving merged reads
+        if self.merge_mode == "background":
+            # lock-free MPSC update path: hand the rebuild to the worker
+            # thread and return immediately — this mutation never waits on
+            # a merge, in-flight or otherwise
+            self._notify_merge_worker()
+            return
         try:
             self.merge()
         except MergeFailedError:
@@ -1054,78 +1115,120 @@ class PlexService:
         """Fold the delta into a brand-new snapshot and swap it in.
 
         The rebuild (spline + auto-tune + radix layer via ``build_plex``,
-        per shard) happens entirely off the hot path on the materialised
-        logical key array; only when the new snapshot is complete does the
-        single ``_state`` assignment publish it together with a fresh empty
-        delta — readers never see a half-built index. Starts a new stats
-        epoch. Returns ``True`` if a swap happened (``False`` for an empty
-        delta or an empty logical key set, which stays buffered)."""
+        per shard — parallelised over ``build_workers``) happens entirely
+        off the hot path on the materialised logical key array; only when
+        the new snapshot is complete does the single ``_state`` assignment
+        publish it together with a fresh delta — readers never see a
+        half-built index. Starts a new stats epoch. Returns ``True`` if a
+        swap happened (``False`` for an empty delta or an empty logical
+        key set, which stays buffered).
+
+        In ``merge_mode="sync"`` (the default) the whole merge runs under
+        the service lock: when this call returns, the swap is published
+        and no mutation interleaved. In ``merge_mode="background"`` this
+        explicit call still merges *in the calling thread* (serialised
+        with the worker via the merge mutex) but follows the background
+        protocol — the service lock is held only for the capture and
+        publish instants, so concurrent ``insert``/``delete``/``lookup``
+        proceed during the rebuild and land in the residual journal."""
+        if self.merge_mode == "background":
+            # lock order _merge_mutex -> _lock; never hold _lock across
+            # the rebuild (that is the whole point of background mode)
+            with self._merge_mutex:
+                return self._merge_once()
         with self._lock:
             self.drain()
+            return self._merge_once()
+
+    def _merge_once(self) -> bool:
+        """One capture -> rebuild -> publish merge cycle.
+
+        Caller must serialise merges: sync mode holds the service lock for
+        the whole call (so the capture/publish lock acquisitions below are
+        re-entrant and the cycle is atomic, the classic behaviour);
+        background mode holds ``_merge_mutex`` and nothing else, so the
+        expensive middle — logical-key materialisation, ``Snapshot.build``,
+        pre-warm, the phase-1 snapshot write — runs with no service lock
+        held and mutations flow freely into the journal."""
+        with self._lock:
             state = self._state
             if state.delta.empty:
                 return False
-            t0 = time.perf_counter()
-            new_keys = state.delta.logical_keys()
-            if new_keys.size == 0:
-                # a snapshot cannot be empty; keep buffering until an
-                # insert arrives (lookups stay correct via the delta fold)
-                return False
-            try:
-                fire(POINT_MERGE_BUILD)
-                snap = Snapshot.build(
-                    new_keys, self.eps, n_shards=self._n_shards_req,
-                    backend=self.default_backend, block=self.block,
-                    devices=self._devices, epoch=state.snapshot.epoch + 1,
-                    **self._build_kw)
-                # pre-warm the new snapshot's device pipelines while the
-                # old one still serves (only when the jnp path is actually
-                # in use), so the first post-swap lookup never pays a cold
-                # compile — warm time is merge/build work, not serving
-                # work. The routed mesh path re-plans + re-partitions the
-                # NEW snapshot here (placement is snapshot-scoped),
-                # warming every device slab.
-                new_router = self._make_router(snap)
-                if new_router is not None:
-                    new_router.warmup(np.uint64(snap.keys[0]),
-                                      self._delta_capacity)
-                elif state.snapshot.built_stacked() is not None:
-                    self._warm_stacked(snap, self._delta_capacity)
-                # durable mode: commit the new generation (snapshot +
-                # fresh WAL + manifest rename) BEFORE the in-memory swap —
-                # a crash in here leaves the previous generation live with
-                # its WAL still holding every buffered update, so recovery
-                # replays to exactly the pre-merge logical state
-                new_dur = None
-                if self._dur is not None:
+            # the capture point: an immutable delta state plus the journal
+            # sequence folded into it. Everything journaled after seq0 is
+            # residual — replayed into the fresh delta at publish.
+            dstate = state.delta.capture()
+            seq0 = self._op_seq
+            while self._op_journal and self._op_journal[0][0] <= seq0:
+                self._op_journal.popleft()
+        t0 = time.perf_counter()
+        new_keys = state.delta.logical_keys(dstate)
+        if new_keys.size == 0:
+            # a snapshot cannot be empty; keep buffering until an
+            # insert arrives (lookups stay correct via the delta fold)
+            return False
+        dur = self._dur
+        new_gen = dur.generation + 1 if dur is not None else -1
+        try:
+            fire(POINT_MERGE_BUILD)
+            snap = Snapshot.build(
+                new_keys, self.eps, n_shards=self._n_shards_req,
+                backend=self.default_backend, block=self.block,
+                devices=self._devices, epoch=state.snapshot.epoch + 1,
+                workers=self.build_workers, **self._build_kw)
+            # pre-warm the new snapshot's device pipelines while the
+            # old one still serves (only when the jnp path is actually
+            # in use), so the first post-swap lookup never pays a cold
+            # compile — warm time is merge/build work, not serving
+            # work. The routed mesh path re-plans + re-partitions the
+            # NEW snapshot here (placement is snapshot-scoped),
+            # warming every device slab.
+            new_router = self._make_router(snap)
+            if new_router is not None:
+                new_router.warmup(np.uint64(snap.keys[0]),
+                                  self._delta_capacity)
+            elif state.snapshot.built_stacked() is not None:
+                self._warm_stacked(snap, self._delta_capacity)
+            # durable phase 1: the heavyweight snapshot write, still off
+            # the service lock. Nothing is live until the manifest rename
+            # in phase 2, so a crash here leaves a dead gen dir at worst.
+            if dur is not None:
+                try:
+                    save_snapshot(dur.root / gen_name(new_gen), snap,
+                                  fsync=dur.fsync)
+                except Exception:
+                    shutil.rmtree(dur.root / gen_name(new_gen),
+                                  ignore_errors=True)
+                    raise
+        except Exception as e:
+            # merge-failure isolation: nothing above touched the live
+            # (snapshot, delta, router) triple or the committed
+            # on-disk generation, so serving continues bit-identically
+            # against the buffered delta; auto-merges retry after a
+            # capped exponential backoff
+            raise self._arm_merge_backoff(e) from e
+        # the publish phase: drain the queue (queued lookups observe the
+        # state they were dispatched against), durable phase 2 (fresh WAL
+        # seeded with the residual + one manifest rename), then the atomic
+        # swap — one reference assignment publishes the new (snapshot,
+        # delta, router) triple with the residual ops replayed in order.
+        with self._lock:
+            self.drain()
+            residual = list(self._op_journal)
+            new_dur = None
+            if dur is not None:
+                try:
                     new_dur = self._commit_generation(
-                        self._dur.root, self._dur.generation + 1, snap, (),
-                        self._dur.fsync)
-            except Exception as e:
-                # merge-failure isolation: nothing above touched the live
-                # (snapshot, delta, router) triple or the committed
-                # on-disk generation, so serving continues bit-identically
-                # against the buffered delta; auto-merges retry after a
-                # capped exponential backoff
-                self.stats.merge_failures += 1
-                self._consec_merge_failures += 1
-                backoff = min(self.merge_backoff_cap_s,
-                              self.merge_backoff_s *
-                              2.0 ** (self._consec_merge_failures - 1))
-                self._merge_retry_at = time.monotonic() + backoff
-                self._note_error(e)
-                log.warning("merge failed (attempt %d, retry in %.3fs): "
-                            "%r; live state untouched",
-                            self._consec_merge_failures, backoff, e)
-                raise MergeFailedError(
-                    f"merge failed ({self._consec_merge_failures} "
-                    f"consecutive attempt(s)): {e!r}; the live state is "
-                    "untouched and the delta keeps serving") from e
-            # the atomic swap: one reference assignment publishes the new
-            # (snapshot, delta, router) triple
-            self._state = _ServiceState(
-                snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity),
-                new_router)
+                        dur.root, new_gen, snap,
+                        [(name, op_keys) for _, name, op_keys in residual],
+                        dur.fsync, snapshot_saved=True)
+                except Exception as e:
+                    raise self._arm_merge_backoff(e) from e
+            delta = DeltaBuffer(snap.keys, capacity=self._delta_capacity)
+            for _, name, op_keys in residual:
+                getattr(delta, name)(op_keys)
+            self._op_journal.clear()
+            self._state = _ServiceState(snap, delta, new_router)
             if new_dur is not None:
                 self._swap_durable(new_dur)
             self._consec_merge_failures = 0
@@ -1133,12 +1236,82 @@ class PlexService:
             self.stats.merges += 1
             self.stats.merge_s += time.perf_counter() - t0
             self.stats.new_epoch(snap.epoch)
-            return True
+        return True
+
+    def _arm_merge_backoff(self, e: BaseException) -> MergeFailedError:
+        """Account one contained merge failure and arm the capped
+        exponential retry backoff; returns the ``MergeFailedError`` to
+        raise (callers ``raise self._arm_merge_backoff(e) from e``)."""
+        self.stats.merge_failures += 1
+        self._consec_merge_failures += 1
+        backoff = min(self.merge_backoff_cap_s,
+                      self.merge_backoff_s *
+                      2.0 ** (self._consec_merge_failures - 1))
+        self._merge_retry_at = time.monotonic() + backoff
+        self._note_error(e)
+        log.warning("merge failed (attempt %d, retry in %.3fs): "
+                    "%r; live state untouched",
+                    self._consec_merge_failures, backoff, e)
+        return MergeFailedError(
+            f"merge failed ({self._consec_merge_failures} "
+            f"consecutive attempt(s)): {e!r}; the live state is "
+            "untouched and the delta keeps serving")
+
+    # -- background merge worker --------------------------------------------
+    def _notify_merge_worker(self) -> None:
+        """Wake (lazily starting or restarting) the merge worker thread
+        (lock held). A worker that died — chaos-injected or real — is
+        replaced here on the next update, after its armed backoff expires
+        inside the worker loop, so worker death degrades exactly like a
+        contained merge failure instead of silently stopping merges."""
+        if self._closed:
+            return
+        w = self._merge_worker
+        if w is None or not w.is_alive():
+            w = threading.Thread(target=self._merge_worker_main,
+                                 name="plex-merge-worker", daemon=True)
+            self._merge_worker = w
+            w.start()
+        self._merge_wakeup.set()
+
+    def _merge_worker_main(self) -> None:
+        """The background merge loop: wait for a wakeup, re-check that a
+        merge is actually due (threshold still exceeded, backoff expired),
+        then run one full capture/rebuild/publish cycle under the merge
+        mutex. ``MergeFailedError`` is contained (backoff armed inside);
+        anything else — including a chaos fault injected at
+        ``POINT_MERGE_WORKER`` — kills this worker, arms the same backoff,
+        and leaves the live state untouched: the delta keeps serving and
+        the next update starts a fresh worker."""
+        while True:
+            self._merge_wakeup.wait()
+            self._merge_wakeup.clear()
+            if self._closed:
+                return
+            try:
+                fire(POINT_MERGE_WORKER)
+                if self._consec_merge_failures and \
+                        time.monotonic() < self._merge_retry_at:
+                    continue
+                if not 0 < self.merge_threshold \
+                        <= self._state.delta.n_entries:
+                    continue
+                with self._merge_mutex:
+                    try:
+                        self._merge_once()
+                    except MergeFailedError:
+                        pass      # contained; backoff armed, retry later
+            except BaseException as e:  # noqa: BLE001 - worker death path
+                self._arm_merge_backoff(e)
+                log.warning("merge worker died: %r; live state untouched, "
+                            "a fresh worker starts on the next update", e)
+                return
 
     # -- durability ----------------------------------------------------------
     @staticmethod
     def _commit_generation(root: pathlib.Path, gen: int, snap: Snapshot,
-                           seed_ops, fsync: bool) -> _DurableState:
+                           seed_ops, fsync: bool, *,
+                           snapshot_saved: bool = False) -> _DurableState:
         """THE durable commit protocol, in one place: write generation
         ``gen``'s snapshot, create its fresh WAL seeded with ``seed_ops``
         (``DeltaBuffer.pending_ops`` order), then publish with one atomic
@@ -1146,10 +1319,17 @@ class PlexService:
         anywhere in here leaves the previous generation (and its WAL)
         authoritative — and a *caught* failure additionally sweeps the
         partial generation away, so disk state always equals committed
-        state plus at most one in-progress commit."""
+        state plus at most one in-progress commit.
+
+        ``snapshot_saved=True`` is the background merge's split commit:
+        the (slow) snapshot write already happened off the service lock
+        (phase 1), so this call only runs the fast tail — WAL seed +
+        manifest rename — under the lock, keeping writers unblocked for
+        the duration of the rebuild."""
         wal = None
         try:
-            save_snapshot(root / gen_name(gen), snap, fsync=fsync)
+            if not snapshot_saved:
+                save_snapshot(root / gen_name(gen), snap, fsync=fsync)
             wal = WriteAheadLog.create(root / wal_name(gen), fsync=fsync)
             for opname, op_keys in seed_ops:
                 wal.append(_WAL_OPS[opname], op_keys)
@@ -1189,14 +1369,18 @@ class PlexService:
         call commits a fresh generation)."""
         root = pathlib.Path(root)
         root.mkdir(parents=True, exist_ok=True)
-        with self._lock:
-            self.drain()
-            state = self._state
-            man = read_manifest(root)
-            gen = man.generation + 1 if man is not None else 0
-            self._swap_durable(self._commit_generation(
-                root, gen, state.snapshot, state.delta.pending_ops(),
-                fsync))
+        # serialise with merges (lock order _merge_mutex -> _lock): a
+        # background merge mid-rebuild targets generation N+1 too, and two
+        # writers racing for the same gen dir must never interleave
+        with self._merge_mutex:
+            with self._lock:
+                self.drain()
+                state = self._state
+                man = read_manifest(root)
+                gen = man.generation + 1 if man is not None else 0
+                self._swap_durable(self._commit_generation(
+                    root, gen, state.snapshot, state.delta.pending_ops(),
+                    fsync))
         return root
 
     @classmethod
@@ -1351,6 +1535,16 @@ class PlexService:
             self._closed = True
             self._cancel_timer()
             self.drain()
+            worker = self._merge_worker
+        # join the merge worker OUTSIDE the lock: its publish phase needs
+        # the lock, so joining under it would deadlock mid-merge. The
+        # worker observes _closed at its next wakeup and exits; an
+        # in-flight merge is allowed to finish (its durable commit needs
+        # the WAL we are about to close).
+        if worker is not None and worker.is_alive():
+            self._merge_wakeup.set()
+            worker.join()
+        with self._lock:
             if self._dur is not None:
                 self._dur.wal.close()
                 self._dur = None

@@ -1,0 +1,314 @@
+"""Background merge worker: lock-free updates, residual journal, chaos.
+
+The tentpole contract (ISSUE 8): with ``merge_mode="background"`` the
+update path never waits on an in-flight merge — mutations append to the
+WAL/delta and return while a dedicated worker thread rebuilds, pre-warms,
+and commits off the hot path, publishing via the single ``_ServiceState``
+reference assignment. Merge failures AND worker death are contained
+exactly like sync-mode failures (backoff armed, live state untouched,
+delta keeps serving)."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.index import Snapshot
+from repro.resilience.faults import (FAULTS, POINT_MERGE_BUILD,
+                                     POINT_MERGE_WORKER, fail_once)
+from repro.serving.plex_service import PlexService
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    FAULTS.reset()
+    yield
+    FAULTS.reset()
+
+
+def _keys(n: int = 60_000, seed: int = 11) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.integers(0, 2**62, n, dtype=np.uint64))
+
+
+def wait_for(pred, timeout: float = 30.0) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def _svc(keys, **kw):
+    kw.setdefault("backend", "numpy")
+    kw.setdefault("merge_mode", "background")
+    kw.setdefault("merge_threshold", 256)
+    return PlexService(keys.copy(), 32, **kw)
+
+
+def test_merge_mode_validation():
+    with pytest.raises(ValueError, match="merge_mode"):
+        PlexService(_keys(1000), 32, merge_mode="async")
+    with pytest.raises(ValueError, match="build_workers"):
+        PlexService(_keys(1000), 32, build_workers=0)
+
+
+def test_threshold_triggers_background_merge():
+    keys = _keys()
+    svc = _svc(keys)
+    try:
+        ins = np.random.default_rng(0).integers(0, 2**62, 300,
+                                                dtype=np.uint64)
+        svc.insert(ins)
+        assert wait_for(lambda: svc.stats.merges == 1)
+        assert wait_for(lambda: svc.n_pending == 0)
+        logical = np.sort(np.concatenate([keys, ins]))
+        q = logical[::37]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+        h = svc.health()
+        assert h["merge_mode"] == "background"
+        assert h["journal_ops"] == 0
+    finally:
+        svc.close()
+
+
+def test_updates_never_block_on_inflight_merge(monkeypatch):
+    """The lock-free MPSC contract: while the worker holds a (slowed)
+    rebuild, insert()/delete()/lookup()/submit() all complete without
+    waiting for it."""
+    keys = _keys()
+    orig = Snapshot.build.__func__
+    build_started = threading.Event()
+
+    def slow_build(cls, *a, **kw):
+        if kw.get("epoch", 0) > 0:       # only merges, not the initial build
+            build_started.set()
+            time.sleep(1.0)
+        return orig(cls, *a, **kw)
+
+    monkeypatch.setattr(Snapshot, "build", classmethod(slow_build))
+    svc = _svc(keys)
+    rng = np.random.default_rng(1)
+    try:
+        svc.insert(rng.integers(0, 2**62, 300, dtype=np.uint64))
+        assert build_started.wait(10.0), "merge never started"
+        # the worker is now sleeping inside Snapshot.build with no
+        # service lock held — every serving-path call must be fast
+        t0 = time.monotonic()
+        svc.insert(rng.integers(0, 2**62, 10, dtype=np.uint64))
+        svc.delete(keys[:3])
+        svc.lookup(keys[::997])
+        ticket = svc.submit(keys[::499])
+        ticket.result()
+        elapsed = time.monotonic() - t0
+        assert elapsed < 0.5, (f"serving-path calls took {elapsed:.2f}s "
+                               "during an in-flight background merge")
+        assert wait_for(lambda: svc.stats.merges >= 1)
+    finally:
+        svc.close()
+
+
+def test_mid_merge_mutations_survive_via_residual_journal(monkeypatch):
+    """Ops accepted while the rebuild runs land in the op journal and are
+    replayed into the fresh delta at publish — nothing is lost, lookups
+    over the final logical set are exact."""
+    keys = _keys()
+    orig = Snapshot.build.__func__
+    build_started = threading.Event()
+
+    def slow_build(cls, *a, **kw):
+        if kw.get("epoch", 0) > 0:
+            build_started.set()
+            time.sleep(0.4)
+        return orig(cls, *a, **kw)
+
+    monkeypatch.setattr(Snapshot, "build", classmethod(slow_build))
+    svc = _svc(keys)
+    rng = np.random.default_rng(2)
+    try:
+        batch1 = rng.integers(0, 2**62, 300, dtype=np.uint64)
+        svc.insert(batch1)
+        assert build_started.wait(10.0)
+        batch2 = rng.integers(0, 2**62, 40, dtype=np.uint64)
+        svc.insert(batch2)               # lands mid-merge -> residual
+        dead = keys[1:4].copy()
+        svc.delete(dead)                 # ditto
+        assert svc.health()["journal_ops"] >= 1
+        assert wait_for(lambda: svc.stats.merges == 1)
+        # post-merge: snapshot = keys+batch1, delta = residual replay
+        logical = np.sort(np.concatenate(
+            [np.delete(keys, [1, 2, 3]), batch1, batch2]))
+        q = logical[::41]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+        assert svc.n_keys == logical.size
+    finally:
+        svc.close()
+
+
+def test_worker_death_contained_and_recovers():
+    """The fault-matrix case: the merge worker dies (chaos point
+    ``serving.merge.worker``) -> live state untouched, backoff armed,
+    delta keeps serving exact merged lookups; the next update after
+    backoff starts a fresh worker that completes the merge."""
+    keys = _keys()
+    svc = _svc(keys, merge_backoff_s=0.01, merge_backoff_cap_s=0.02)
+    rng = np.random.default_rng(3)
+    try:
+        FAULTS.inject(POINT_MERGE_WORKER, fail_once())
+        ins = rng.integers(0, 2**62, 300, dtype=np.uint64)
+        svc.insert(ins)
+        assert wait_for(lambda: svc.stats.merge_failures == 1)
+        assert wait_for(lambda: not svc.health()["merge_worker_alive"])
+        assert FAULTS.trips(POINT_MERGE_WORKER) == 1
+        # live state untouched: no swap happened, the delta still holds
+        # every buffered update and keeps serving exact merged lookups
+        assert svc.stats.merges == 0
+        assert svc.n_pending == ins.size
+        assert svc.health()["degraded"]
+        logical = np.sort(np.concatenate([keys, ins]))
+        q = logical[::53]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+        time.sleep(0.05)                 # let the armed backoff expire
+        more = rng.integers(0, 2**62, 10, dtype=np.uint64)
+        svc.insert(more)                 # lazily restarts a fresh worker
+        assert wait_for(lambda: svc.stats.merges == 1)
+        logical = np.sort(np.concatenate([logical, more]))
+        q = logical[::59]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+        assert not svc.health()["degraded"]
+    finally:
+        svc.close()
+
+
+def test_merge_build_fault_contained_without_killing_worker():
+    """A fault in the rebuild itself (POINT_MERGE_BUILD) is a contained
+    MergeFailedError inside the worker loop: backoff arms, the worker
+    thread survives, and the retry succeeds."""
+    keys = _keys()
+    svc = _svc(keys, merge_backoff_s=0.01, merge_backoff_cap_s=0.02)
+    rng = np.random.default_rng(4)
+    try:
+        FAULTS.inject(POINT_MERGE_BUILD, fail_once())
+        ins = rng.integers(0, 2**62, 300, dtype=np.uint64)
+        svc.insert(ins)
+        assert wait_for(lambda: svc.stats.merge_failures == 1)
+        assert svc.health()["merge_worker_alive"]
+        time.sleep(0.05)
+        svc.insert(rng.integers(0, 2**62, 5, dtype=np.uint64))
+        assert wait_for(lambda: svc.stats.merges == 1)
+    finally:
+        svc.close()
+
+
+def test_durable_background_merge_round_trips(tmp_path):
+    keys = _keys()
+    svc = _svc(keys)
+    rng = np.random.default_rng(5)
+    try:
+        svc.save(tmp_path, fsync=False)
+        ins = rng.integers(0, 2**62, 400, dtype=np.uint64)
+        svc.insert(ins)
+        assert wait_for(lambda: svc.stats.merges == 1)
+        assert svc.generation == 1
+    finally:
+        svc.close()
+    with PlexService.open(tmp_path, backend="numpy",
+                          merge_mode="background") as svc2:
+        logical = np.sort(np.concatenate([keys, ins]))
+        q = logical[::61]
+        assert np.array_equal(svc2.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+
+
+def test_reader_writer_stress_exact_lookups():
+    """Concurrent readers hammer lookup() while a writer pushes the
+    service through several background merges; every lookup must be
+    internally consistent (a present key resolves to a position holding
+    that key in the reader's captured logical view) and the final state
+    exact."""
+    keys = _keys(40_000)
+    svc = _svc(keys, merge_threshold=128)
+    rng = np.random.default_rng(6)
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def reader():
+        try:
+            q = keys[:: max(1, keys.size // 128)].copy()
+            while not stop.is_set():
+                out = svc.lookup(q)
+                # original keys are never deleted in this stress, so each
+                # must be found at a non-negative, in-range position
+                assert np.all(out >= 0) and np.all(out < svc.n_keys + 1)
+        except BaseException as e:  # noqa: BLE001 - surfaced to the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    expect = [keys]
+    try:
+        for _ in range(8):
+            b = rng.integers(0, 2**62, 100, dtype=np.uint64)
+            svc.insert(b)
+            expect.append(b)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors, errors
+    svc.merge()                        # fold any residual
+    logical = np.sort(np.concatenate(expect))
+    q = logical[::71]
+    assert np.array_equal(svc.lookup(q),
+                          np.searchsorted(logical, q, "left"))
+    assert svc.n_keys == logical.size
+    svc.close()
+
+
+def test_explicit_merge_in_background_mode():
+    keys = _keys(20_000)
+    svc = _svc(keys, merge_threshold=0)     # manual merges only
+    try:
+        ins = np.random.default_rng(8).integers(0, 2**62, 50,
+                                                dtype=np.uint64)
+        svc.insert(ins)
+        assert svc.stats.merges == 0        # threshold 0 never auto-merges
+        assert svc.merge() is True
+        assert svc.n_pending == 0
+        logical = np.sort(np.concatenate([keys, ins]))
+        q = logical[::29]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(logical, q, "left"))
+    finally:
+        svc.close()
+
+
+def test_close_joins_worker(monkeypatch):
+    """close() must let an in-flight merge finish (its durable commit
+    needs the WAL) and join the worker before releasing the handles."""
+    keys = _keys(20_000)
+    orig = Snapshot.build.__func__
+    build_started = threading.Event()
+
+    def slow_build(cls, *a, **kw):
+        if kw.get("epoch", 0) > 0:
+            build_started.set()
+            time.sleep(0.3)
+        return orig(cls, *a, **kw)
+
+    monkeypatch.setattr(Snapshot, "build", classmethod(slow_build))
+    svc = _svc(keys)
+    svc.insert(np.random.default_rng(9).integers(0, 2**62, 300,
+                                                 dtype=np.uint64))
+    assert build_started.wait(10.0)
+    svc.close()
+    assert not svc.health()["merge_worker_alive"]
+    assert svc.stats.merges == 1           # the in-flight merge completed
