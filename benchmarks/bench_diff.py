@@ -41,7 +41,13 @@ _METRICS = (("ns_per_lookup", "ns/lookup", False),
 
 
 def _key(rec: dict) -> Key:
-    return (rec["dataset"], rec["n"], rec["eps"], rec["backend"],
+    """Match key over the *known* identity fields only. Every field is
+    read with ``.get`` so records from a newer schema (extra fields like
+    the PR-9 ``p50_ns``/``p99_ns`` latency percentiles, or identity
+    fields this version has never heard of) still pair with the baseline
+    instead of KeyError-ing the whole diff."""
+    return (rec.get("dataset", ""), rec.get("n", -1), rec.get("eps", -1),
+            rec.get("backend", ""),
             rec.get("workload", "uniform"), rec.get("write_frac", -1.0),
             rec.get("n_devices", -1), rec.get("fallback_backend", ""),
             rec.get("workers", -1), rec.get("n_shards", -1))

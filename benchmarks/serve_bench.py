@@ -39,6 +39,10 @@ can diff the perf trajectory (``benchmarks.bench_diff``):
                  | "mesh_scale" | "degraded",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
 
+Uniform records additionally carry ``p50_ns``/``p99_ns`` — exact per-call
+latency percentiles (ns per key) read from the observability registry's
+ring-buffer histogram over block-sized lookups (schema-additive;
+``bench_diff`` match keys ignore unknown fields by construction).
 Zipf records additionally carry ``cache_hit_rate``; update_mix records
 carry ``write_frac`` and ``merges``; cold_vs_warm records carry
 ``load_s``, ``first_batch_s``, and ``warm_speedup``; mesh_scale records
@@ -63,6 +67,7 @@ import numpy as np
 
 from repro.core.index import BACKENDS
 from repro.data import generate
+from repro.obs import METRICS
 from repro.serving import PlexService
 
 from .common import datasets, queries
@@ -86,6 +91,29 @@ SNAP_DIR = pathlib.Path(os.environ.get("BENCH_SNAPSHOT_DIR",
 # best-of-N rejects shared-runner noise; interpret-mode pallas stays at 3
 # (it is a correctness harness, each repeat is expensive)
 REPEATS = {"numpy": 5, "jnp": 5, "pallas": 3}
+
+
+def _latency_percentiles(svc: PlexService, q: np.ndarray, backend: str,
+                         *, max_calls: int = 64) -> tuple[float, float]:
+    """Per-call p50/p99 lookup latency (ns per key) through the
+    observability registry's ring-buffer histogram: arms ``METRICS`` for a
+    bounded number of block-sized ``lookup`` calls and reads the exact
+    recent-window percentiles back. The registry state and enable switch
+    are restored afterwards, so the throughput timings around this helper
+    always run un-instrumented."""
+    was = METRICS.enabled
+    METRICS.reset()
+    METRICS.enable()
+    try:
+        b = svc.block
+        for i in range(min(max_calls, max(q.size // b, 1))):
+            svc.lookup(q[i * b:(i + 1) * b] if (i + 1) * b <= q.size
+                       else q[-b:], backend=backend)
+        h = METRICS.histogram("serve.lookup_ns_per_key")
+        return h.percentile(0.50), h.percentile(0.99)
+    finally:
+        METRICS.enabled = was
+        METRICS.reset()
 
 
 def zipf_queries(keys: np.ndarray, n: int, *, theta: float = 1.2,
@@ -320,6 +348,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                     dname, eps, backend, "serve lookup wrong")
                 ns = svc.throughput(qb, backends=(backend,),
                                     repeats=REPEATS[backend])[backend]
+                p50, p99 = _latency_percentiles(svc, qb, backend)
                 rows.append(f"serve,{dname},{keys.size},{eps},{backend},"
                             f"uniform,{ns:.1f},{svc.build_s:.3f},"
                             f"{svc.size_bytes},,,,,,,")
@@ -327,6 +356,10 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                     "dataset": dname, "n": int(keys.size), "eps": int(eps),
                     "backend": backend, "workload": "uniform",
                     "ns_per_lookup": round(float(ns), 1),
+                    # schema-additive (PR 9): exact recent-window per-call
+                    # latency percentiles from the obs histogram ring
+                    "p50_ns": round(float(p50), 1),
+                    "p99_ns": round(float(p99), 1),
                     "build_s": round(float(svc.build_s), 4),
                     "size_bytes": int(svc.size_bytes),
                 })

@@ -276,7 +276,14 @@ class Snapshot:
             shards.append(LearnedIndex(plex=px, default_backend=backend,
                                        block=block, device=dev))
         build_s = time.perf_counter() - t0
-        return cls(keys, eps, offsets, shards, build_s=build_s, epoch=epoch)
+        snap = cls(keys, eps, offsets, shards, build_s=build_s, epoch=epoch)
+        from ..obs.trace import TRACE
+        if TRACE.enabled:
+            bs = snap.build_stats
+            TRACE.record("build.spline", bs.spline_s, shards=len(shards))
+            TRACE.record("build.tune", bs.tune_s, shards=len(shards))
+            TRACE.record("build.layer", bs.layer_s, shards=len(shards))
+        return snap
 
     # -- metadata -----------------------------------------------------------
     @property

@@ -50,6 +50,7 @@ from typing import Iterator
 
 import numpy as np
 
+from ..obs.trace import TRACE
 from ..resilience.faults import POINT_BUILD_SHARD, fire
 from .plex import PLEX, build_plex
 
@@ -167,7 +168,11 @@ def iter_built_shards(keys: np.ndarray, offsets: np.ndarray, eps: int, *,
     if workers <= 1 or len(spans) <= 1 or pool == "serial":
         for s, (lo, hi) in enumerate(spans):
             fire(POINT_BUILD_SHARD, shard=s)
-            yield s, build_plex(keys[lo:hi], eps, **build_kw)
+            px = build_plex(keys[lo:hi], eps, **build_kw)
+            if TRACE.enabled:
+                TRACE.record("build.shard", px.stats.total_s,
+                             shard=s, n_keys=hi - lo)
+            yield s, px
         return
 
     workers = min(int(workers), len(spans))
@@ -203,7 +208,12 @@ def iter_built_shards(keys: np.ndarray, offsets: np.ndarray, eps: int, *,
             ready[s] = px
             while next_s in ready:
                 fire(POINT_BUILD_SHARD, shard=next_s)
-                yield next_s, ready.pop(next_s)
+                nxt = ready.pop(next_s)
+                if TRACE.enabled:
+                    # worker-side CPU seconds (wall time overlaps shards)
+                    TRACE.record("build.shard", nxt.stats.total_s,
+                                 shard=next_s, pool=pool)
+                yield next_s, nxt
                 next_s += 1
     finally:
         ex.shutdown(wait=True, cancel_futures=True)

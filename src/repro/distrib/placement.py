@@ -210,6 +210,29 @@ def shard_weights(snap, *, hotness: np.ndarray | None = None) -> np.ndarray:
     return scale_by_hotness(w, hotness)
 
 
+def live_hotness(counts, n_shards: int) -> np.ndarray | None:
+    """Validate a live per-shard routed-query fold (the device counter
+    plane the observability layer accumulates) into a planner-ready
+    hotness array, or ``None`` when it cannot inform a plan.
+
+    The live estimate is best-effort by contract — it may be absent
+    (observability never armed), stale across a merge that changed the
+    shard count, or empty (no counted traffic yet). All of those return
+    ``None`` so the caller falls back to statics-only weights instead of
+    raising mid-replan; ``scale_by_hotness`` stays the strict validator
+    for explicitly-passed hotness."""
+    if counts is None:
+        return None
+    h = np.asarray(counts, dtype=np.float64)
+    if h.ndim != 1 or h.size != int(n_shards):
+        return None
+    if not np.all(np.isfinite(h)) or np.any(h < 0):
+        return None
+    if h.sum() <= 0:
+        return None
+    return h
+
+
 def shard_hotness(snap, sample: np.ndarray) -> np.ndarray:
     """Per-shard query counts of a sample stream (routed through the
     snapshot's shard table) — the optional skew input to ``plan_placement``.

@@ -46,6 +46,7 @@ import dataclasses
 import functools
 from typing import Any, Callable, Optional
 
+from ..obs.metrics import METRICS
 from ..resilience.faults import (POINT_BACKEND_DISPATCH,
                                  POINT_BACKEND_FACTORY, fire)
 
@@ -86,6 +87,8 @@ def _hook_dispatch(impl: Any, name: str, method: str) -> None:
     @functools.wraps(orig)
     def instrumented(*args, **kw):
         fire(POINT_BACKEND_DISPATCH, backend=name)
+        if METRICS.enabled:
+            METRICS.counter(f"serve.dispatch.{name}").inc()
         return orig(*args, **kw)
 
     try:

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.plex import PLEX
+from ..obs.metrics import METRICS
 from .pairs import extract_bits, pair_le, split_u64
 from .planes import (DeltaPlanes, PlexPlanes, StackedPlanes, build_planes,
                      build_stacked_planes, finalize_indices, pad_queries)
@@ -136,12 +137,17 @@ def _route(sp: StackedPlanes, qhi, qlo):
     return jnp.clip(cnt - 1, 0, sp.n_shards - 1)
 
 
-def _stacked_pipeline(sp: StackedPlanes, probe: str, qhi, qlo):
-    """Route + segment + probe + clamp + global-offset fold, one dispatch.
+def _stacked_pipeline_aux(sp: StackedPlanes, probe: str, qhi, qlo):
+    """The stacked pipeline plus its observability by-products.
 
-    Returns global int32 first-occurrence indices (already clamped to each
-    shard's real key count and shifted by its global offset) — the host
-    only strips padding lanes.
+    Returns ``(res, sid, dist)``: the global clamped indices (exactly
+    ``_stacked_pipeline``'s result — it is this function's first output),
+    the routed shard id per lane, and the probe travel ``got - (base +
+    row)`` — how far past the spline's eps-window base the final probe
+    landed, the measured per-query error the piecewise-linear-
+    approximation analysis needs. Both extras are values the pipeline
+    already computes; exposing them costs nothing when untraced (XLA
+    dead-code-eliminates unused outputs in the plain wrapper below).
     """
     sid = _route(sp, qhi, qlo)
     s = sp.static
@@ -166,7 +172,58 @@ def _stacked_pipeline(sp: StackedPlanes, probe: str, qhi, qlo):
     got = probe_lower_bound(qhi, qlo, sp.dhi, sp.dlo, row + base,
                             window=sp.window, mode=probe)
     local = jnp.minimum(got - row, jnp.take(sp.n_real, sid))
-    return local + jnp.take(sp.row_off, sid)
+    return local + jnp.take(sp.row_off, sid), sid, got - (row + base)
+
+
+def _stacked_pipeline(sp: StackedPlanes, probe: str, qhi, qlo):
+    """Route + segment + probe + clamp + global-offset fold, one dispatch.
+
+    Returns global int32 first-occurrence indices (already clamped to each
+    shard's real key count and shifted by its global offset) — the host
+    only strips padding lanes.
+    """
+    return _stacked_pipeline_aux(sp, probe, qhi, qlo)[0]
+
+
+# probe-travel histogram resolution of the device counter plane: bucket 0
+# is an exact window-base landing (0 probe steps), bucket k covers travel
+# in [2^(k-1), 2^k), the last bucket overflows — 16 buckets span any eps
+N_PROBE_BUCKETS = 16
+
+
+def _probe_bucket(dist):
+    """log2 bucket of a probe travel distance (int32 lanes -> int32)."""
+    d = jnp.maximum(dist, 1).astype(jnp.float32)
+    b = jnp.where(dist <= 0, 0, jnp.floor(jnp.log2(d)).astype(jnp.int32) + 1)
+    return jnp.clip(b, 0, N_PROBE_BUCKETS - 1)
+
+
+def _stacked_counted(aux, n_shards: int, cap: int, qhi, qlo, n_valid,
+                     counters, dkhi=None, dklo=None, dcum=None):
+    """The counted dispatch: stacked (optionally merged) pipeline plus the
+    device-resident telemetry counter plane.
+
+    ``counters`` is explicit state threaded exactly like the hot-key
+    cache: one uint32 array of ``n_shards + N_PROBE_BUCKETS`` slots
+    (uint32, not int64 — jax serves with x64 disabled), laid out as
+    ``[per-shard routed-query counts | probe-travel histogram]``. Each
+    valid lane scatter-adds 1 into its routed shard's slot and its probe
+    bucket's slot — two ``at[].add`` scatters fused into the same jit
+    dispatch, so live shard hotness costs no extra dispatches and no
+    sample pass. Padded lanes (masked by ``n_valid``) count nowhere, so
+    the folded host counts equal ``np.bincount(snap.route(q))`` exactly
+    on any single-threaded stream. ``cap`` appends the merged delta fold
+    (``cap == 0`` is the read-only epoch), which adjusts results only —
+    routing and probing are snapshot-side work either way.
+    """
+    res, sid, dist = aux(qhi, qlo)
+    inc = (jax.lax.iota(jnp.int32, qhi.shape[0])
+           < n_valid).astype(jnp.uint32)
+    counters = counters.at[sid].add(inc)
+    counters = counters.at[jnp.int32(n_shards) + _probe_bucket(dist)].add(inc)
+    if cap:
+        res = res + delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, cap=cap)
+    return res, counters
 
 
 def delta_rank_adjust(qhi, qlo, dkhi, dklo, dcum, *, cap: int):
@@ -307,6 +364,10 @@ class StackedJnpPlex:
     _cache: Any = None        # uint32 [3, n_slots] device array or None
     _merged_fns: dict = dataclasses.field(default_factory=dict)
     _cached_merged_fns: dict = dataclasses.field(default_factory=dict)
+    # observability: counted dispatches (per-cap, like _merged_fns) and the
+    # device-resident uint32 counter plane they thread (None until armed)
+    _counted_fns: dict = dataclasses.field(default_factory=dict)
+    _counters: Any = None
 
     @classmethod
     def from_plexes(cls, plexes: Sequence[PLEX], row_off: np.ndarray, *,
@@ -364,6 +425,49 @@ class StackedJnpPlex:
         return jax.jit(functools.partial(_stacked_cached,
                                          self._snapshot_fn(), cap))
 
+    def _aux_fn(self):
+        """The instrumented pipeline ``(qhi, qlo) -> (res, sid, dist)``
+        feeding the counted dispatch. The default is the jnp expression of
+        the stacked pipeline over this impl's planes — every stacked
+        backend shares the same planes and the same pipeline math (the
+        Pallas kernel body *is* this pipeline), so the counted results are
+        bit-identical to the backend's own by construction."""
+        return functools.partial(_stacked_pipeline_aux, self.planes,
+                                 self.probe)
+
+    def _build_counted_fn(self, cap: int):
+        """jit'd counted dispatch at delta capacity ``cap`` (observability
+        armed): full pipeline + the telemetry counter-plane scatter."""
+        return jax.jit(functools.partial(_stacked_counted, self._aux_fn(),
+                                         self.planes.n_shards, cap))
+
+    def _counted_fn(self, cap: int):
+        fn = self._counted_fns.get(cap)
+        if fn is None:
+            fn = self._build_counted_fn(cap)
+            self._counted_fns[cap] = fn
+        return fn
+
+    def _fresh_counters(self):
+        z = np.zeros(self.planes.n_shards + N_PROBE_BUCKETS, np.uint32)
+        return jnp.asarray(z) if self.sharding is None \
+            else jax.device_put(z, self.sharding)
+
+    def take_counters(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """Fold the device telemetry counter plane back to host and reset
+        it (the serving layer's sync-point hook). Returns ``(shard_counts,
+        probe_hist)`` as host int64 arrays, or ``None`` when no counted
+        dispatch has run. Best-effort under concurrent dispatches — a
+        dispatch racing the reset may drop its counts (same contract as
+        the cache state); single-threaded streams fold exactly."""
+        c = self._counters
+        if c is None:
+            return None
+        self._counters = self._fresh_counters()
+        host = np.asarray(c).astype(np.int64)
+        n = self.planes.n_shards
+        return host[:n], host[n:]
+
     @property
     def n_real_total(self) -> int:
         return self.planes.n_real_total
@@ -399,6 +503,24 @@ class StackedJnpPlex:
         delta buffer into the same dispatch (merged lookup); ``n_valid``
         marks the real (unpadded) lane count for cache accounting."""
         dp = delta if delta is not None and delta.n_entries else None
+        if METRICS.enabled:
+            # counted dispatch: same pipeline + the telemetry counter
+            # plane, bypassing the hot-key cache on purpose — the live
+            # hotness estimate must see every query through the full
+            # pipeline (a cache absorbs exactly the hottest keys, which
+            # would bias the estimate precisely where it matters), and
+            # probe-travel is only meaningful on actually-probed lanes.
+            # Results are bit-identical either way (the cache contract).
+            nv = np.int32(self.block if n_valid is None else n_valid)
+            if self._counters is None:
+                self._counters = self._fresh_counters()
+            if dp is None:
+                out, self._counters = self._counted_fn(0)(
+                    qhi, qlo, nv, self._counters)
+            else:
+                out, self._counters = self._counted_fn(dp.cap)(
+                    qhi, qlo, nv, self._counters, dp.khi, dp.klo, dp.cum0)
+            return LaneResult(out)
         if self._cache is not None:
             nv = np.int32(self.block if n_valid is None else n_valid)
             if dp is None:

@@ -113,7 +113,14 @@ class StackedPallasPlex(StackedJnpPlex):
     """Single-dispatch stacked (merged) lookup through the fused Pallas
     kernel. Same planes, contract, cache, and management as
     ``StackedJnpPlex`` — only the builder hooks differ, swapping the jit'd
-    jnp pipeline for ``stacked_pallas_lookup``."""
+    jnp pipeline for ``stacked_pallas_lookup``.
+
+    Observability: the counted dispatch (``obs.METRICS`` armed) is
+    inherited unchanged — it runs the jnp expression of the same pipeline
+    over the same shared planes, so routed-shard and probe-trip counts are
+    exact for this backend too and results stay bit-identical. The fused
+    kernel remains the obs-off serving path; only an *observed* run pays
+    the jnp dispatch."""
 
     interpret: bool = True
 

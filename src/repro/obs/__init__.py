@@ -1,0 +1,49 @@
+"""End-to-end observability: process-global metrics + span tracing.
+
+The package is deliberately tiny and dependency-light (numpy + stdlib,
+never jax), so every layer of the serving stack — kernels, persistence,
+resilience, the service itself — can import it without cost or cycles.
+
+Two process-global singletons, both **disabled by default**:
+
+* ``METRICS`` (``obs.metrics.MetricsRegistry``) — counters, gauges,
+  fixed-bucket histograms with a ring buffer of raw samples
+  (p50/p90/p99/max), and fixed-length counter vectors (per-shard planes).
+* ``TRACE`` (``obs.trace.Tracer``) — span-based tracing with thread-local
+  nesting and a bounded event log that exports as JSON lines.
+
+The disabled contract mirrors ``resilience.faults.FAULTS``' unarmed
+pattern: an unobserved hot path pays one attribute read per hook site
+(``if METRICS.enabled: ...`` / ``TRACE.span(...)`` returning a shared
+null context), which is what lets the hooks live permanently inside the
+serving pipeline instead of behind a build flag.
+
+Exporters live in ``obs.export`` (Prometheus text format, JSONL event
+log); the serving layer surfaces the same data in
+``PlexService.health()["metrics"]``.
+"""
+from __future__ import annotations
+
+from .metrics import METRICS, MetricsRegistry
+from .trace import TRACE, Tracer
+
+__all__ = ["METRICS", "TRACE", "MetricsRegistry", "Tracer",
+           "enable_observability", "disable_observability",
+           "observability_enabled"]
+
+
+def enable_observability() -> None:
+    """Arm both singletons (metrics + tracing)."""
+    METRICS.enable()
+    TRACE.enable()
+
+
+def disable_observability() -> None:
+    """Disarm both singletons; accumulated data is kept until ``reset``/
+    ``clear`` so a report can still be exported after a measured run."""
+    METRICS.disable()
+    TRACE.disable()
+
+
+def observability_enabled() -> bool:
+    return METRICS.enabled or TRACE.enabled

@@ -42,10 +42,13 @@ import logging
 import os
 import pathlib
 import struct
+import time
 import zlib
 
 import numpy as np
 
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACE
 from ..resilience.faults import POINT_WAL_APPEND, POINT_WAL_FSYNC, fire
 from .manifest import fsync_dir
 
@@ -118,12 +121,23 @@ class WriteAheadLog:
         # surfaces to the caller BEFORE the delta buffer mutates, so the
         # WAL-before-mutation invariant (durable >= served) always holds
         fire(POINT_WAL_APPEND)
+        obs = METRICS.enabled or TRACE.enabled
+        t0 = time.perf_counter() if obs else 0.0
         rec = _encode_record(op, keys)
         self._fh.write(rec)
         self._fh.flush()
         if self.fsync:
             fire(POINT_WAL_FSYNC)
+            tf = time.perf_counter() if obs else 0.0
             os.fsync(self._fh.fileno())
+            if obs:
+                TRACE.record("wal.fsync", time.perf_counter() - tf)
+        if obs:
+            dur = time.perf_counter() - t0
+            TRACE.record("wal.append", dur, bytes=len(rec), op=op)
+            METRICS.counter("wal.append_records").inc()
+            METRICS.counter("wal.append_bytes").inc(len(rec))
+            METRICS.histogram("wal.append_us").observe(dur * 1e6)
         return len(rec)
 
     @property

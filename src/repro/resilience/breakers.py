@@ -25,6 +25,9 @@ import threading
 import time
 from typing import Callable
 
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACE
+
 __all__ = ["CLOSED", "HALF_OPEN", "OPEN", "CircuitBreaker"]
 
 CLOSED = "closed"
@@ -92,14 +95,25 @@ class CircuitBreaker:
                 return True
             return False
 
+    def _note_transition(self, frm: str, to: str) -> None:
+        """Telemetry for a state change (called outside ``_lock``)."""
+        if TRACE.enabled:
+            TRACE.event("breaker.transition", breaker=self.name,
+                        frm=frm, to=to)
+        if METRICS.enabled:
+            METRICS.counter(f"breaker.{self.name}.to_{to}").inc()
+
     def record_success(self) -> None:
         with self._lock:
             self.successes += 1
             self._consecutive_failures = 0
             self._probe_inflight = False
-            self._state = CLOSED
+            prev, self._state = self._state, CLOSED
+        if prev != CLOSED:
+            self._note_transition(prev, CLOSED)
 
     def record_failure(self, error: BaseException | None = None) -> None:
+        opened_from = None
         with self._lock:
             self.failures += 1
             self.last_error = error
@@ -109,13 +123,17 @@ class CircuitBreaker:
                 self._opened_at = self._clock()
                 self._probe_inflight = False
                 self.opens += 1
-                return
-            self._consecutive_failures += 1
-            if self._state == CLOSED and \
-                    self._consecutive_failures >= self.failure_threshold:
-                self._state = OPEN
-                self._opened_at = self._clock()
-                self.opens += 1
+                opened_from = HALF_OPEN
+            else:
+                self._consecutive_failures += 1
+                if self._state == CLOSED and \
+                        self._consecutive_failures >= self.failure_threshold:
+                    self._state = OPEN
+                    self._opened_at = self._clock()
+                    self.opens += 1
+                    opened_from = CLOSED
+        if opened_from is not None:
+            self._note_transition(opened_from, OPEN)
 
     def snapshot(self) -> dict:
         """JSON-friendly state for ``PlexService.health()``."""

@@ -147,9 +147,12 @@ from jax.sharding import Mesh
 from ..core.index import BACKENDS, SHARD_MAX_KEYS, LearnedIndex, Snapshot
 from ..kernels.backends import get_backend
 from ..distrib.partition import partition_stacked
-from ..distrib.placement import PlacementPlan, plan_matches, plan_placement
+from ..distrib.placement import (PlacementPlan, live_hotness, plan_matches,
+                                 plan_placement)
 from ..distrib.routed_lookup import RoutedStackedLookup
-from ..kernels.jnp_lookup import PROBE_MODES
+from ..kernels.jnp_lookup import N_PROBE_BUCKETS, PROBE_MODES
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACE
 from ..kernels.pairs import split_u64
 from ..kernels.planes import finalize_indices
 from ..parallel.sharding import logical_sharding
@@ -225,6 +228,12 @@ class ServiceStats:
     # per-backend breaker states (mirrors CircuitBreaker.state; the full
     # snapshots live in PlexService.health())
     breakers: dict = dataclasses.field(default_factory=dict)
+    # guards the per-epoch cache counters against the background merge
+    # worker's ``new_epoch`` rollover racing a serving thread's sync-point
+    # adds (check-epoch-then-add must be atomic or a counter from the old
+    # epoch can land *after* the reset and pollute the new epoch's rate)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def note(self, n_queries: int, n_batches: int, n_padded: int) -> None:
         self.queries += n_queries
@@ -235,15 +244,31 @@ class ServiceStats:
         self.inflight_batches -= n_batches
         self.drained_batches += n_batches
 
+    def note_cache_synced(self, hits: int, queries: int,
+                          full_hit: bool, epoch: int) -> bool:
+        """Fold one synced micro-batch's cache telemetry into the current
+        epoch — atomically dropped when ``epoch`` is stale (the batch was
+        dispatched against a snapshot that has since been swapped out).
+        Returns whether the fold was applied."""
+        with self._lock:
+            if epoch != self.epoch:
+                return False
+            self.cache_queries += queries
+            self.cache_hits += hits
+            if full_hit:
+                self.full_hit_batches += 1
+            return True
+
     def new_epoch(self, epoch: int) -> None:
         """Start a fresh stats epoch at a snapshot swap: cache counters
         restart so ``cache_hit_rate`` describes the *current* snapshot
         instead of mixing epochs (the old epoch's totals stay in the
         cumulative query/batch counters)."""
-        self.epoch = epoch
-        self.cache_queries = 0
-        self.cache_hits = 0
-        self.full_hit_batches = 0
+        with self._lock:
+            self.epoch = epoch
+            self.cache_queries = 0
+            self.cache_hits = 0
+            self.full_hit_batches = 0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -529,6 +554,14 @@ class PlexService:
         self._state = _ServiceState(
             snap, DeltaBuffer(snap.keys, capacity=self._delta_capacity),
             self._make_router(snap))
+        # live per-shard routed-query counts + probe-trip histogram for the
+        # *current* epoch, folded from the device counter planes at sync
+        # points while METRICS is armed. Per-epoch by design (reset at each
+        # snapshot publish): shard identities change across a merge, so a
+        # cumulative fold would blend incompatible shard maps. Host numpy,
+        # written only under best-effort telemetry contract.
+        self._hotness = np.zeros(snap.n_shards, np.int64)
+        self._probe_hist = np.zeros(N_PROBE_BUCKETS, np.int64)
         # durable-mode attachment (None = in-memory only); load_s is the
         # wall time PlexService.open spent mapping + replaying
         self._dur: _DurableState | None = None
@@ -642,7 +675,13 @@ class PlexService:
             plan = req
         else:
             n_dev = req.n_devices if isinstance(req, PlacementPlan) else req
-            plan = plan_placement(snap, min(int(n_dev), len(devices)))
+            # skew-aware re-plan: the live routed-query fold (when armed
+            # and fresh for this shard count) scales the static weights, so
+            # a merge-triggered re-plan packs fewer hot shards per device.
+            # getattr: the __init__-time call runs before the fold exists.
+            hot = live_hotness(getattr(self, "_hotness", None), snap.n_shards)
+            plan = plan_placement(snap, min(int(n_dev), len(devices)),
+                                  hotness=hot)
         while True:
             try:
                 parts = partition_stacked(snap, plan, devices,
@@ -664,8 +703,10 @@ class PlexService:
                 log.warning("router: %s; re-planning onto %d surviving "
                             "device(s) (dropped %r)", e, len(devices),
                             dropped)
-                plan = plan_placement(snap, min(plan.n_devices,
-                                                len(devices)))
+                plan = plan_placement(
+                    snap, min(plan.n_devices, len(devices)),
+                    hotness=live_hotness(getattr(self, "_hotness", None),
+                                         snap.n_shards))
                 continue
             break
         if parts is None:
@@ -678,15 +719,25 @@ class PlexService:
         eager per-device micro-batch dispatch, one sync, host
         re-permutation. Stats accounting mirrors the stacked path."""
         epoch = self.stats.epoch
-        batch = state.router.dispatch(q, self._delta_view(state))
+        with TRACE.span("serve.dispatch", path="routed", n=q.size):
+            batch = state.router.dispatch(q, self._delta_view(state))
         self.stats.inflight_batches += batch.n_batches
-        if self.cache_slots:
-            self.stats.cache_queries += q.size
         self.stats.note(q.size, batch.n_batches, batch.padded_lanes)
-        out = batch.assemble(q.size)       # the one sync point
-        for res in batch.lane_results():
-            self._note_synced(res, epoch)
+        with TRACE.span("serve.sync", path="routed", n=q.size):
+            out = batch.assemble(q.size)   # the one sync point
+        for _, count, lanes in batch.spans:
+            for i, res in enumerate(lanes):
+                nv = min(self.block, max(count - i * self.block, 1))
+                self._note_synced(res, epoch, nv)
         self.stats.note_drained(batch.n_batches)
+        if METRICS.enabled:
+            router = state.router
+            n_shards = state.snapshot.n_shards
+            for d in router.plan.active:
+                part = router.parts[d]
+                if part.impl is not None:
+                    self._fold_impl_counters(part.impl, n_shards,
+                                             base=part.shard_lo)
         return out
 
     # -- stacked single-dispatch path ---------------------------------------
@@ -719,22 +770,54 @@ class PlexService:
         qlo = jax.device_put(qlo, self._batch_sharding)
         res = st.lookup_planes(qhi, qlo, n_valid=n_valid, delta=delta)
         self.stats.inflight_batches += 1
-        if res.hits is not None:
-            self.stats.cache_queries += n_valid
         return res
 
-    def _note_synced(self, res, epoch: int) -> None:
+    def _note_synced(self, res, epoch: int, n_valid: int = 0) -> None:
         """Fold one synced ``LaneResult``'s cache telemetry into the stats
         (called only after the host has materialised the batch). ``epoch``
         is the stats epoch the batch was dispatched under: a batch that
         straddled a snapshot swap is dropped from the fresh epoch's
-        counters, so a swap can never leave ``cache_hits`` without its
-        matching ``cache_queries`` (counters are best-effort telemetry
-        under concurrent lock-free readers; results are never affected)."""
-        if res.hits is not None and epoch == self.stats.epoch:
-            self.stats.cache_hits += int(res.hits)
-            self.stats.full_hit_batches += int(bool(np.asarray(
-                res.full_hit)))
+        counters atomically (``ServiceStats.note_cache_synced`` holds the
+        stats lock across the epoch check and the adds), so a swap can
+        never leave ``cache_hits`` without its matching ``cache_queries``
+        and a stale batch can never pollute the fresh epoch's rate."""
+        if res.hits is not None:
+            self.stats.note_cache_synced(
+                int(res.hits), int(n_valid),
+                bool(np.asarray(res.full_hit)), epoch)
+
+    # -- live hotness / observability folds ----------------------------------
+    def _fold_hotness(self, shard_counts, probe_hist,
+                      n_shards: int, base: int = 0) -> None:
+        """Fold one device counter plane (per-shard routed counts at global
+        shard offset ``base`` + probe-trip histogram) into the service's
+        per-epoch live estimate and mirror it into ``METRICS``. Guarded:
+        a fold whose shard count no longer matches the live array straddled
+        a snapshot swap and is dropped (per-epoch semantics)."""
+        h = self._hotness
+        if h.size != n_shards or shard_counts is None:
+            return
+        counts = np.asarray(shard_counts, np.int64)
+        h[base:base + counts.size] += counts
+        self._probe_hist += np.asarray(probe_hist, np.int64)
+        METRICS.counter("serve.routed_queries").inc(int(counts.sum()))
+        vec = METRICS.vector("serve.shard.routed", n_shards)
+        full = np.zeros(n_shards, np.int64)
+        full[base:base + counts.size] = counts
+        vec.add(full)
+        METRICS.vector("serve.probe.trips", N_PROBE_BUCKETS).add(
+            np.asarray(probe_hist, np.int64))
+
+    def _fold_impl_counters(self, impl, n_shards: int,
+                            base: int = 0) -> None:
+        """Drain ``impl``'s device counter plane (if it has one) into the
+        live fold. Never raises: telemetry must not fail serving."""
+        try:
+            taken = impl.take_counters()
+            if taken is not None:
+                self._fold_hotness(taken[0], taken[1], n_shards, base)
+        except Exception as e:          # pragma: no cover - defensive
+            self._note_error(e)
 
     def _tail_planes(self, qh_all: np.ndarray, ql_all: np.ndarray,
                      start: int) -> tuple[np.ndarray, np.ndarray]:
@@ -772,18 +855,23 @@ class PlexService:
         b = self.block
         epoch = self.stats.epoch
         delta = self._delta_view(state)
-        qh_all, ql_all = split_u64(q)
-        outs = [self._dispatch_planes(st, qh, ql,
-                                      min(b, q.size - i * b), delta)
-                for i, (qh, ql) in enumerate(
-                    self._block_planes(qh_all, ql_all))]
+        with TRACE.span("serve.staging", n=q.size):
+            qh_all, ql_all = split_u64(q)
+        with TRACE.span("serve.dispatch", path="stacked", n=q.size):
+            outs = [self._dispatch_planes(st, qh, ql,
+                                          min(b, q.size - i * b), delta)
+                    for i, (qh, ql) in enumerate(
+                        self._block_planes(qh_all, ql_all))]
         n_batches = len(outs)
         self.stats.note(q.size, n_batches, n_batches * b - q.size)
         # one sync point: host materialisation of the eagerly-queued results
-        res = np.concatenate([np.asarray(o.out) for o in outs])[:q.size]
-        for o in outs:
-            self._note_synced(o, epoch)
+        with TRACE.span("serve.sync", path="stacked", n=q.size):
+            res = np.concatenate([np.asarray(o.out) for o in outs])[:q.size]
+        for i, o in enumerate(outs):
+            self._note_synced(o, epoch, min(b, q.size - i * b))
         self.stats.note_drained(n_batches)
+        if METRICS.enabled:
+            self._fold_impl_counters(st, state.snapshot.n_shards)
         return res.astype(np.int64)
 
     # -- resilience ---------------------------------------------------------
@@ -883,7 +971,32 @@ class PlexService:
             "last_errors": list(self._last_errors),
             "armed_faults": FAULTS.active(),
             "closed": self._closed,
+            # schema-additive observability section (PR 9): the live
+            # per-epoch hotness/probe estimates plus the full registry
+            "metrics": {
+                "enabled": bool(METRICS.enabled),
+                "shard_hotness": [int(x) for x in self._hotness],
+                "probe_trips": [int(x) for x in self._probe_hist],
+                "cache_hits": int(self.stats.cache_hits),
+                "cache_queries": int(self.stats.cache_queries),
+                "full_hit_batches": int(self.stats.full_hit_batches),
+                "registry": METRICS.snapshot(),
+            },
         }
+
+    def live_hotness(self) -> np.ndarray:
+        """Per-shard routed-query counts for the current epoch, accumulated
+        by the device counter planes while ``obs.METRICS`` is armed (zeros
+        when observability was never enabled this epoch). This is the live
+        equivalent of ``distrib.placement.shard_hotness`` over the served
+        stream, and feeds the placement re-plan at the next merge."""
+        return self._hotness.copy()
+
+    def probe_trip_hist(self) -> np.ndarray:
+        """Per-epoch log2-bucketed probe-travel histogram (bucket 0 =
+        prediction exactly right; bucket ``b`` = travel in
+        ``[2**(b-1), 2**b)`` rows) from the device counter planes."""
+        return self._probe_hist.copy()
 
     # -- serving ------------------------------------------------------------
     def route(self, q: np.ndarray) -> np.ndarray:
@@ -955,6 +1068,21 @@ class PlexService:
         q = np.ascontiguousarray(q, dtype=np.uint64)
         if q.size == 0:
             return np.zeros(0, dtype=np.int64)
+        if not (METRICS.enabled or TRACE.enabled):
+            return self._lookup_chain(q, backend)
+        t0 = time.perf_counter()
+        with TRACE.span("serve.lookup", backend=backend, n=q.size):
+            out = self._lookup_chain(q, backend)
+        if METRICS.enabled:
+            dur = time.perf_counter() - t0
+            METRICS.histogram("serve.lookup_us").observe(dur * 1e6)
+            METRICS.histogram("serve.lookup_ns_per_key").observe(
+                dur * 1e9 / q.size)
+        return out
+
+    def _lookup_chain(self, q: np.ndarray, backend: str) -> np.ndarray:
+        """The fallback-chain walk behind ``lookup`` (observability hooks
+        live in the wrapper so the unobserved path stays untouched)."""
         state = self._state       # one consistent (snapshot, delta) capture
         chain = self._chain_for(backend)
         last_err: BaseException | None = None
@@ -999,8 +1127,17 @@ class PlexService:
         snap = state.snapshot
         if snap.n_shards == 1:
             out = self._lookup_shard(snap.shards[0], q, backend, 0)
+            if METRICS.enabled:
+                self._fold_hotness(np.asarray([q.size], np.int64),
+                                   np.zeros(N_PROBE_BUCKETS, np.int64), 1)
         else:
             sid = snap.route(q)
+            if METRICS.enabled:
+                # host path: routed counts from the binning we already did
+                # (no device probe histogram on this path)
+                self._fold_hotness(
+                    np.bincount(sid, minlength=snap.n_shards),
+                    np.zeros(N_PROBE_BUCKETS, np.int64), snap.n_shards)
             out = np.empty(q.size, dtype=np.int64)
             for s in np.unique(sid):
                 mask = sid == s
@@ -1150,7 +1287,7 @@ class PlexService:
         expensive middle — logical-key materialisation, ``Snapshot.build``,
         pre-warm, the phase-1 snapshot write — runs with no service lock
         held and mutations flow freely into the journal."""
-        with self._lock:
+        with TRACE.span("merge.capture"), self._lock:
             state = self._state
             if state.delta.empty:
                 return False
@@ -1187,6 +1324,12 @@ class PlexService:
             if new_router is not None:
                 new_router.warmup(np.uint64(snap.keys[0]),
                                   self._delta_capacity)
+                if METRICS.enabled:
+                    # warm dispatches are not served traffic
+                    for d in new_router.plan.active:
+                        impl = new_router.parts[d].impl
+                        if impl is not None:
+                            impl.take_counters()
             elif state.snapshot.built_stacked() is not None:
                 self._warm_stacked(snap, self._delta_capacity)
             # durable phase 1: the heavyweight snapshot write, still off
@@ -1207,12 +1350,16 @@ class PlexService:
             # against the buffered delta; auto-merges retry after a
             # capped exponential backoff
             raise self._arm_merge_backoff(e) from e
+        if TRACE.enabled:
+            # build + warm + phase-1 write, measured from the capture point
+            TRACE.record("merge.build", time.perf_counter() - t0,
+                         n_keys=new_keys.size, epoch=snap.epoch)
         # the publish phase: drain the queue (queued lookups observe the
         # state they were dispatched against), durable phase 2 (fresh WAL
         # seeded with the residual + one manifest rename), then the atomic
         # swap — one reference assignment publishes the new (snapshot,
         # delta, router) triple with the residual ops replayed in order.
-        with self._lock:
+        with TRACE.span("merge.publish", epoch=snap.epoch), self._lock:
             self.drain()
             residual = list(self._op_journal)
             new_dur = None
@@ -1236,6 +1383,13 @@ class PlexService:
             self.stats.merges += 1
             self.stats.merge_s += time.perf_counter() - t0
             self.stats.new_epoch(snap.epoch)
+            # per-epoch live hotness restarts with the new shard map (the
+            # counter-plane folds guard on the array length, so any
+            # straggler fold from the old epoch is dropped, not misbinned)
+            self._hotness = np.zeros(snap.n_shards, np.int64)
+            self._probe_hist = np.zeros(N_PROBE_BUCKETS, np.int64)
+        if METRICS.enabled:
+            METRICS.counter("merge.cycles").inc()
         return True
 
     def _arm_merge_backoff(self, e: BaseException) -> MergeFailedError:
@@ -1510,6 +1664,9 @@ class PlexService:
             svc._dur = _DurableState(root=root, generation=chosen,
                                      wal=wal, fsync=fsync)
         svc.load_s = time.perf_counter() - t0
+        if TRACE.enabled:
+            TRACE.record("persist.open", svc.load_s,
+                         generation=svc.generation)
         return svc
 
     @property
@@ -1577,7 +1734,7 @@ class PlexService:
         ticket = LookupTicket(self, q.size)
         if q.size == 0:
             return ticket
-        with self._lock:
+        with TRACE.span("serve.submit", n=q.size), self._lock:
             if self.max_queue and self._q_len + q.size > self.max_queue:
                 err = QueueFullError(
                     f"submit: queue holds {self._q_len} of "
@@ -1666,6 +1823,8 @@ class PlexService:
         buf = np.empty(self.block, dtype=np.uint64)
         pieces = []
         filled = 0
+        obs = METRICS.enabled or TRACE.enabled
+        now = time.monotonic() if obs else 0.0
         while filled < want and self._q_chunks:
             entry = self._q_chunks[0]
             ticket, arr, consumed, _ = entry
@@ -1674,6 +1833,12 @@ class PlexService:
             pieces.append((ticket, filled, consumed, take))
             entry[2] += take
             filled += take
+            if obs:
+                wait_s = max(now - entry[3], 0.0)
+                TRACE.record("serve.queue_wait", wait_s, lanes=take)
+                if METRICS.enabled:
+                    METRICS.histogram("serve.queue_wait_us").observe(
+                        wait_s * 1e6)
             if entry[2] == arr.size:
                 self._q_chunks.popleft()
         self._q_len -= filled
@@ -1769,8 +1934,19 @@ class PlexService:
             for ticket, src, dst, cnt in pieces:
                 ticket._out[dst:dst + cnt] = arr[src:src + cnt]
                 ticket._filled += cnt
-            self._note_synced(res, epoch)
+            self._note_synced(res, epoch, filled)
             self.stats.note_drained(1)
+        if METRICS.enabled:
+            # drain the queue path's device counter plane (best-effort;
+            # counters from dispatches that straddled a swap are dropped
+            # by the fold's shard-count guard)
+            state = self._state
+            try:
+                st = self.stacked_impl(state)
+            except Exception:
+                st = None
+            if st is not None:
+                self._fold_impl_counters(st, state.snapshot.n_shards)
 
     def drain(self, timeout: float | None = None) -> None:
         """Flush the queued sub-block remainder and sync every in-flight
@@ -1788,18 +1964,20 @@ class PlexService:
             raise TimeoutError(
                 f"drain: service lock not acquired within {timeout}s")
         try:
-            self._cancel_timer()
-            if self._q_len:
-                try:
-                    st = self.stacked_impl()
-                except Exception as e:
-                    self._note_error(e)
-                    st = None
-                if st is None:
-                    self._fill_queue_sync()
-                else:
-                    self._flush_partial(st)
-            self._drain_outstanding(deadline)
+            with TRACE.span("serve.drain", queued=self._q_len,
+                            outstanding=len(self._outstanding)):
+                self._cancel_timer()
+                if self._q_len:
+                    try:
+                        st = self.stacked_impl()
+                    except Exception as e:
+                        self._note_error(e)
+                        st = None
+                    if st is None:
+                        self._fill_queue_sync()
+                    else:
+                        self._flush_partial(st)
+                self._drain_outstanding(deadline)
         finally:
             self._lock.release()
 
@@ -1826,6 +2004,8 @@ class PlexService:
                                        np.zeros(1, np.int64), delta_cap)
             jax.block_until_ready(
                 st.lookup_planes(qhi, qlo, n_valid=1, delta=dummy).out)
+        if METRICS.enabled:
+            st.take_counters()    # warm dispatches are not served traffic
         return True
 
     def warmup(self, backend: str | None = None) -> None:

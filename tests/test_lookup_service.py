@@ -143,7 +143,8 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert len(records) == len(BACKENDS) + 4 + n_mesh
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
-    extra = {"zipf": {"cache_hit_rate"},
+    extra = {"uniform": {"p50_ns", "p99_ns"},
+             "zipf": {"cache_hit_rate"},
              "update_mix": {"write_frac", "merges"},
              "degraded": {"fallback_backend"},
              "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"},
@@ -151,6 +152,9 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     for rec in records:
         assert set(rec) == base | extra.get(rec["workload"], set())
         assert rec["ns_per_lookup"] > 0
+    for rec in records:
+        if rec["workload"] == "uniform":
+            assert 0 < rec["p50_ns"] <= rec["p99_ns"]
     zipf = [r for r in records if r["workload"] == "zipf"]
     assert len(zipf) == 1 and 0.0 <= zipf[0]["cache_hit_rate"] <= 1.0
     um = [r for r in records if r["workload"] == "update_mix"]

@@ -1,0 +1,502 @@
+"""End-to-end observability (ISSUE 9): metrics registry, pipeline
+tracing, and the live shard-hotness export.
+
+The contract under test:
+
+* both singletons are **disabled by default** and a disabled hook site
+  costs one attribute read / one shared null context — results NEVER
+  change when observability is armed (counted dispatch is bit-identical
+  on every backend);
+* armed, the device counter planes make ``live_hotness`` an exact
+  running ``np.bincount(snap.route(stream))`` over everything served
+  this epoch, probe-trip totals match the counted query count, and
+  spans cover every pipeline stage;
+* ``health()`` grows a schema-additive ``metrics`` section that stays
+  JSON-serialisable through chaos, and the per-epoch stats counters
+  survive the background merge worker's epoch rollover race-free.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (METRICS, TRACE, disable_observability,
+                       enable_observability, observability_enabled)
+from repro.obs.export import prometheus_text, write_jsonl
+from repro.obs.metrics import RING_SIZE, Histogram, MetricsRegistry
+from repro.obs.trace import Tracer, _NULL
+from repro.serving.plex_service import PlexService, ServiceStats
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends disarmed with empty instruments — the
+    singletons are process-global, exactly like resilience.FAULTS."""
+    disable_observability()
+    METRICS.reset()
+    TRACE.clear()
+    yield
+    disable_observability()
+    METRICS.reset()
+    TRACE.clear()
+
+
+def _keys(n: int = 50_000, seed: int = 5) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(0, 2**62, n, dtype=np.uint64))
+
+
+# -- registry primitives -----------------------------------------------------
+
+def test_disabled_by_default_and_null_span_shared():
+    assert not observability_enabled()
+    assert TRACE.span("x") is _NULL
+    assert TRACE.span("y", a=1) is _NULL     # attrs never allocate a span
+    TRACE.record("x", 1.0)
+    TRACE.event("x")
+    assert TRACE.events() == []
+
+
+def test_registry_counters_gauges_vectors():
+    r = MetricsRegistry()
+    c = r.counter("a.b")
+    c.inc()
+    c.inc(4)
+    assert c.snapshot() == 5
+    assert r.counter("a.b") is c             # get-or-create returns shared
+    r.gauge("g").set(2.5)
+    v = r.vector("shards", 4)
+    v.add(np.asarray([1, 2, 3, 4]))
+    v.add_at(0, 10)
+    assert v.snapshot() == [11, 2, 3, 4]
+    with pytest.raises(ValueError, match="shape"):
+        v.add(np.zeros(3))
+    # a length change replaces (epoch-scoped per-shard planes)
+    v2 = r.vector("shards", 6)
+    assert v2 is not v and v2.snapshot() == [0] * 6
+    snap = r.snapshot()
+    assert snap["counters"]["a.b"] == 5
+    assert snap["gauges"]["g"] == 2.5
+    json.dumps(snap)                          # JSON-serialisable contract
+
+
+def test_histogram_percentiles_and_ring_wrap():
+    h = Histogram("lat")
+    for v in range(1, 1001):
+        h.observe(float(v))
+    assert h.count == 1000 and h.max == 1000.0
+    assert h.percentile(0.50) == 500.0
+    assert h.percentile(0.99) == 990.0
+    assert h.percentile(0.0) == 1.0
+    # wrap the ring: the recent window forgets the first samples
+    for v in range(RING_SIZE):
+        h.observe(10_000.0)
+    assert h.percentile(0.50) == 10_000.0
+    assert h.count == 1000 + RING_SIZE        # totals stay cumulative
+    buckets = h.bucket_counts()
+    assert buckets[-1][0] == float("inf")
+    assert buckets[-1][1] == h.count          # cumulative ends at total
+    snap = h.snapshot()
+    assert set(snap) == {"count", "sum", "max", "p50", "p90", "p99"}
+
+
+def test_tracer_nesting_record_event_jsonl():
+    tr = Tracer()
+    tr.enable()
+    with tr.span("outer", n=2):
+        with tr.span("inner"):
+            pass
+    tr.record("posthoc", 0.5, shard=1)
+    tr.event("marker", state="open")
+    evs = tr.events()
+    by = {e["name"]: e for e in evs}
+    assert by["inner"]["depth"] == 1 and by["outer"]["depth"] == 0
+    # inner exits (and emits) before outer
+    assert evs.index(by["inner"]) < evs.index(by["outer"])
+    assert by["posthoc"]["dur_us"] == pytest.approx(5e5)
+    assert by["marker"]["dur_us"] == 0.0
+    assert by["outer"]["attrs"]["n"] == 2
+    for line in tr.to_jsonl().splitlines():
+        json.loads(line)
+
+
+def test_prometheus_text_format():
+    r = MetricsRegistry()
+    r.counter("wal.append_records").inc(3)
+    r.histogram("serve.lookup_us").observe(5.0)
+    r.vector("serve.shard.routed", 2).add(np.asarray([7, 9]))
+    text = prometheus_text(r, prefix="plex")
+    assert "plex_wal_append_records_total 3" in text
+    assert 'plex_serve_shard_routed_total{shard="0"} 7' in text
+    assert "# TYPE plex_serve_lookup_us histogram" in text
+    assert 'plex_serve_lookup_us_bucket{le="+Inf"} 1' in text
+    assert "plex_serve_lookup_us_count 1" in text
+
+
+def test_write_jsonl_spans_then_metrics(tmp_path):
+    enable_observability()
+    with TRACE.span("serve.lookup", n=1):
+        METRICS.counter("c").inc()
+    disable_observability()
+    path = write_jsonl(tmp_path / "events.jsonl")
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert lines[0]["type"] == "span" and lines[0]["name"] == "serve.lookup"
+    assert lines[-1]["type"] == "metrics" and lines[-1]["counters"]["c"] == 1
+
+
+# -- counted dispatch: parity + exact hotness --------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_counted_dispatch_bit_identical(backend):
+    """Arming METRICS must never change a result on any stacked backend
+    (the counted pipeline is the same math over the same planes)."""
+    keys = _keys(30_000)
+    svc = PlexService(keys, 32, n_shards=4, backend=backend)
+    try:
+        q = np.random.default_rng(0).choice(keys, 4000)
+        off = svc.lookup(q)
+        enable_observability()
+        on = svc.lookup(q)
+        assert np.array_equal(off, on)
+        assert np.array_equal(on, np.searchsorted(keys, q, "left"))
+    finally:
+        svc.close()
+
+
+def test_live_hotness_is_exact_bincount():
+    keys = _keys()
+    svc = PlexService(keys, 32, n_shards=4)
+    try:
+        assert svc.live_hotness().tolist() == [0, 0, 0, 0]
+        rng = np.random.default_rng(1)
+        enable_observability()
+        q1 = rng.choice(keys, 6000)
+        q2 = rng.choice(keys, 3000)
+        svc.lookup(q1)
+        svc.lookup(q2)
+        want = (np.bincount(svc.route(q1), minlength=4)
+                + np.bincount(svc.route(q2), minlength=4))
+        assert np.array_equal(svc.live_hotness(), want)
+        # probe trips: every counted query lands in exactly one bucket
+        assert svc.probe_trip_hist().sum() == 9000
+        # the registry mirror agrees
+        assert METRICS.vector("serve.shard.routed", 4).snapshot() == \
+            want.tolist()
+        assert METRICS.counter("serve.routed_queries").snapshot() == 9000
+    finally:
+        svc.close()
+
+
+def test_hotness_counts_merged_delta_and_queue_paths():
+    keys = _keys(40_000)
+    svc = PlexService(keys, 32, n_shards=4, merge_threshold=0)
+    try:
+        fresh = np.unique(np.random.default_rng(2).integers(
+            0, 2**62, 500, dtype=np.uint64))
+        svc.insert(fresh)                    # pending delta: merged path
+        model = svc.logical_keys()
+        rng = np.random.default_rng(3)
+        q = np.asarray(model)[rng.integers(0, model.size, 5000)]
+        enable_observability()
+        got = svc.lookup(q)                  # merged counted dispatch
+        assert np.array_equal(got, np.searchsorted(model, q, "left"))
+        t = svc.submit(q[:2000])             # queue path counts too
+        svc.drain()
+        np.testing.assert_array_equal(
+            t.result(), np.searchsorted(model, q[:2000], "left"))
+        want = (np.bincount(svc.route(q), minlength=4)
+                + np.bincount(svc.route(q[:2000]), minlength=4))
+        assert np.array_equal(svc.live_hotness(), want)
+    finally:
+        svc.close()
+
+
+def test_hotness_resets_at_merge_epoch():
+    keys = _keys(40_000)
+    svc = PlexService(keys, 32, n_shards=4, merge_threshold=256)
+    try:
+        enable_observability()
+        rng = np.random.default_rng(4)
+        svc.lookup(rng.choice(keys, 3000))
+        assert svc.live_hotness().sum() == 3000
+        fresh = np.unique(rng.integers(0, 2**62, 600, dtype=np.uint64))
+        svc.insert(fresh)                    # crosses threshold: sync merge
+        assert svc.stats.merges == 1
+        assert svc.live_hotness().sum() == 0  # per-epoch estimate restarts
+        model = svc.logical_keys()
+        q = np.asarray(model)[rng.integers(0, model.size, 2000)]
+        svc.lookup(q)
+        assert np.array_equal(svc.live_hotness(),
+                              np.bincount(svc.route(q), minlength=4))
+    finally:
+        svc.close()
+
+
+def test_host_backend_hotness_fold():
+    keys = _keys(30_000)
+    svc = PlexService(keys, 32, n_shards=4, backend="numpy")
+    try:
+        enable_observability()
+        q = np.random.default_rng(5).choice(keys, 4000)
+        svc.lookup(q)
+        assert np.array_equal(svc.live_hotness(),
+                              np.bincount(svc.route(q), minlength=4))
+        # the host path routes without probing: no probe trips
+        assert svc.probe_trip_hist().sum() == 0
+    finally:
+        svc.close()
+
+
+def test_routed_mesh_hotness(tmp_path):
+    """plan=1 routed path on the single host device: per-part counter
+    planes fold at their global shard offsets."""
+    keys = _keys(40_000)
+    svc = PlexService(keys, 32, n_shards=4, plan=1)
+    try:
+        if svc.plan is None:
+            pytest.skip("routed path unavailable (shards did not unify)")
+        enable_observability()
+        q = np.random.default_rng(6).choice(keys, 5000)
+        got = svc.lookup(q)
+        assert np.array_equal(got, np.searchsorted(keys, q, "left"))
+        assert np.array_equal(svc.live_hotness(),
+                              np.bincount(svc.route(q), minlength=4))
+    finally:
+        svc.close()
+
+
+# -- spans through the pipeline ----------------------------------------------
+
+def test_serve_spans_cover_pipeline_stages():
+    keys = _keys()
+    svc = PlexService(keys, 32, n_shards=2)
+    try:
+        enable_observability()
+        q = np.random.default_rng(7).choice(keys, 6000)
+        svc.lookup(q)
+        t = svc.submit(q[:1000])
+        svc.drain()
+        t.result()
+        names = TRACE.span_names()
+        for need in ("serve.lookup", "serve.staging", "serve.dispatch",
+                     "serve.sync", "serve.submit", "serve.queue_wait",
+                     "serve.drain"):
+            assert need in names, f"missing span {need}: {sorted(names)}"
+        assert len(names) >= 6
+        # lookup latency histograms observed per call
+        assert METRICS.histogram("serve.lookup_us").count >= 1
+        assert METRICS.histogram("serve.lookup_ns_per_key") \
+            .percentile(0.99) > 0
+    finally:
+        svc.close()
+
+
+def test_merge_wal_build_spans(tmp_path):
+    keys = _keys(30_000)
+    svc = PlexService(keys, 32, n_shards=2)
+    root = tmp_path / "svc"
+    svc.save(root)
+    svc.close()
+    enable_observability()
+    svc = PlexService.open(root, backend="jnp", merge_threshold=128)
+    try:
+        fresh = np.unique(np.random.default_rng(8).integers(
+            0, 2**62, 300, dtype=np.uint64))
+        svc.insert(fresh)                    # WAL append + sync merge
+        names = TRACE.span_names()
+        for need in ("persist.open", "wal.append", "merge.capture",
+                     "merge.build", "merge.publish", "build.shard",
+                     "build.spline", "build.tune", "build.layer"):
+            assert need in names, f"missing span {need}: {sorted(names)}"
+        assert METRICS.counter("merge.cycles").snapshot() == 1
+        assert METRICS.counter("wal.append_records").snapshot() >= 1
+        assert METRICS.counter("wal.append_bytes").snapshot() > 0
+    finally:
+        svc.close()
+
+
+def test_breaker_transition_events():
+    from repro.resilience.breakers import CircuitBreaker
+    enable_observability()
+    br = CircuitBreaker("b", failure_threshold=2, cooldown_s=0.0)
+    br.record_failure(RuntimeError("x"))
+    assert [e for e in TRACE.events()
+            if e["name"] == "breaker.transition"] == []
+    br.record_failure(RuntimeError("x"))     # threshold: closed -> open
+    assert br.allow()                        # cooldown 0: half-open probe
+    br.record_success()                      # probe ok: -> closed
+    evs = [e for e in TRACE.events() if e["name"] == "breaker.transition"]
+    assert [(e["attrs"]["frm"], e["attrs"]["to"]) for e in evs] == \
+        [("closed", "open"), ("half_open", "closed")]
+    assert METRICS.counter("breaker.b.to_open").snapshot() == 1
+
+
+# -- health schema + stats thread-safety -------------------------------------
+
+def test_health_schema_pinned_and_json():
+    keys = _keys(20_000)
+    svc = PlexService(keys, 32, n_shards=2)
+    try:
+        h = svc.health()
+        assert set(h) == {
+            "generation", "epoch", "n_keys", "n_pending", "routed_devices",
+            "fallback_chain", "breakers", "degraded", "queue_depth",
+            "queue_limit", "inflight_batches", "shed_queries",
+            "backend_failures", "fallback_lookups", "merge_failures",
+            "merge_retry_in_s", "merge_mode", "merge_worker_alive",
+            "journal_ops", "wal_bytes", "last_errors", "armed_faults",
+            "closed", "metrics",
+        }
+        assert set(h["metrics"]) == {
+            "enabled", "shard_hotness", "probe_trips", "cache_hits",
+            "cache_queries", "full_hit_batches", "registry",
+        }
+        assert h["metrics"]["enabled"] is False
+        json.dumps(h)
+        enable_observability()
+        svc.lookup(keys[:100])
+        json.dumps(svc.health())             # armed snapshot serialises too
+    finally:
+        svc.close()
+
+
+def test_health_json_after_chaos_fallback():
+    from repro.resilience.faults import FAULTS, POINT_BACKEND_DISPATCH, always
+    keys = _keys(20_000)
+    svc = PlexService(keys, 32, n_shards=2, backend="jnp",
+                      breaker_threshold=1)
+    try:
+        enable_observability()
+        with FAULTS.injected(POINT_BACKEND_DISPATCH,
+                             always(backend="jnp")):
+            q = keys[:500]
+            got = svc.lookup(q)              # degrades to numpy, stays exact
+            assert np.array_equal(got, np.searchsorted(keys, q, "left"))
+        h = svc.health()
+        assert h["degraded"] and h["fallback_lookups"] >= 1
+        json.dumps(h)
+    finally:
+        svc.close()
+
+
+def test_stats_epoch_rollover_race_free():
+    """note_cache_synced vs new_epoch: a stale-epoch fold must be dropped
+    atomically, and concurrent folds must never be lost. Hammer the pair
+    from threads and check exact conservation."""
+    stats = ServiceStats()
+    stats.new_epoch(0)
+    applied = [0]
+    stop = threading.Event()
+
+    def roller():
+        e = 0
+        while not stop.is_set():
+            e += 1
+            stats.new_epoch(e)
+            time.sleep(0)
+
+    def writer():
+        n = 0
+        while not stop.is_set():
+            if stats.note_cache_synced(1, 2, False, stats.epoch):
+                n += 1
+        applied[0] += n
+
+    threads = [threading.Thread(target=roller)] + \
+        [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads[1:]:
+        t.start()
+    threads[0].start()
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    final_epoch = stats.epoch
+    stats.new_epoch(final_epoch)             # roll once more: counters zero
+    assert stats.cache_queries == 0 and stats.cache_hits == 0
+    assert applied[0] > 0                    # some folds landed
+
+
+def test_background_merge_with_obs_stress():
+    """Writer inserts past the threshold while readers serve with obs
+    armed: final lookups stay exact, health stays JSON-serialisable, and
+    the per-epoch live hotness matches the current shard count."""
+    keys = _keys(40_000)
+    svc = PlexService(keys.copy(), 32, n_shards=2, backend="numpy",
+                      merge_mode="background", merge_threshold=256)
+    errors: list[BaseException] = []
+    stop = threading.Event()
+    try:
+        enable_observability()
+        rng = np.random.default_rng(9)
+
+        def reader():
+            r = np.random.default_rng(10)
+            while not stop.is_set():
+                model = svc.logical_keys()
+                q = np.asarray(model)[r.integers(0, model.size, 500)]
+                try:
+                    got = svc.lookup(q)
+                    want = np.searchsorted(model, q, "left")
+                    # a concurrent merge may publish between the capture
+                    # and the lookup; exactness is re-checked at the end
+                    if got.shape != want.shape:
+                        raise AssertionError("shape drift")
+                except Exception as e:       # pragma: no cover
+                    errors.append(e)
+                    return
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for t in readers:
+            t.start()
+        for _ in range(4):
+            svc.insert(np.unique(rng.integers(0, 2**62, 300,
+                                              dtype=np.uint64)))
+            time.sleep(0.02)
+        deadline = time.monotonic() + 30.0
+        while svc.n_pending and time.monotonic() < deadline:
+            time.sleep(0.01)
+        stop.set()
+        for t in readers:
+            t.join()
+        assert not errors, errors
+        model = svc.logical_keys()
+        q = np.asarray(model)[::29]
+        assert np.array_equal(svc.lookup(q),
+                              np.searchsorted(model, q, "left"))
+        assert svc.live_hotness().size == svc.n_shards
+        json.dumps(svc.health())
+    finally:
+        stop.set()
+        svc.close()
+
+
+# -- bench integration -------------------------------------------------------
+
+def test_serve_bench_latency_percentiles_helper():
+    from benchmarks.serve_bench import _latency_percentiles
+    keys = _keys(30_000)
+    svc = PlexService(keys, 32, n_shards=2)
+    try:
+        q = np.random.default_rng(11).choice(keys, svc.block * 4)
+        p50, p99 = _latency_percentiles(svc, q, "jnp", max_calls=4)
+        assert np.isfinite(p50) and np.isfinite(p99)
+        assert 0 < p50 <= p99
+        assert not METRICS.enabled           # switch restored
+        assert METRICS.snapshot()["histograms"] == {}   # state restored
+    finally:
+        svc.close()
+
+
+def test_bench_diff_ignores_unknown_fields():
+    from benchmarks.bench_diff import _key
+    base = {"dataset": "osm", "n": 10, "eps": 16, "backend": "jnp",
+            "workload": "uniform", "ns_per_lookup": 100.0}
+    extended = dict(base, p50_ns=90.0, p99_ns=500.0, some_future_field=1)
+    assert _key(base) == _key(extended)
+    # a record missing even identity fields keys without raising
+    _key({"ns_per_lookup": 1.0})
