@@ -39,11 +39,13 @@ can diff the perf trajectory (``benchmarks.bench_diff``):
                  | "mesh_scale" | "degraded",
      "ns_per_lookup": float, "build_s": float, "size_bytes": int}
 
-Uniform records additionally carry ``p50_ns``/``p99_ns`` — exact per-call
-latency percentiles (ns per key) read from the observability registry's
-ring-buffer histogram over block-sized lookups (schema-additive;
-``bench_diff`` match keys ignore unknown fields by construction).
-Zipf records additionally carry ``cache_hit_rate``; update_mix records
+Uniform, zipf, update_mix, mesh_scale, and degraded records additionally
+carry ``p50_ns``/``p99_ns`` — exact per-call latency percentiles (ns per
+key) read from the observability registry's ring-buffer histogram over
+block-sized lookups (schema-additive; ``bench_diff`` match keys ignore
+unknown fields by construction), so the trajectory gate sees tail
+latency per workload — including the degraded fallback path — not just
+the mean. Zipf records additionally carry ``cache_hit_rate``; update_mix records
 carry ``write_frac`` and ``merges``; cold_vs_warm records carry
 ``load_s``, ``first_batch_s``, and ``warm_speedup``; mesh_scale records
 carry ``n_devices``; degraded records carry ``fallback_backend`` (all
@@ -193,8 +195,10 @@ def _run_update_mix(keys: np.ndarray, n_reads: int,
     got = svc.lookup(sample, backend="jnp")
     assert np.array_equal(got, np.searchsorted(model, sample, "left")), (
         "update_mix merged lookup wrong")
+    p50, p99 = _latency_percentiles(svc, sample, "jnp")
     return {
         "ns_per_lookup": serve_s / total_reads * 1e9,
+        "p50_ns": p50, "p99_ns": p99,
         "build_s": build0 + svc.stats.merge_s,
         "size_bytes": svc.size_bytes,
         "write_frac": UPDATE_MIX_WRITE_FRAC,
@@ -232,10 +236,11 @@ def _run_mesh_scale(keys: np.ndarray, q: np.ndarray,
         n_active = svc.plan.n_active if svc.plan is not None else 1
         ns = svc.throughput(q, backends=("jnp",),
                             repeats=REPEATS["jnp"])["jnp"]
+        p50, p99 = _latency_percentiles(svc, q, "jnp")
         out.append({
             "n_devices": n_dev, "n_active": n_active,
-            "ns_per_lookup": ns, "build_s": svc.build_s,
-            "size_bytes": svc.size_bytes,
+            "ns_per_lookup": ns, "p50_ns": p50, "p99_ns": p99,
+            "build_s": svc.build_s, "size_bytes": svc.size_bytes,
         })
     return out
 
@@ -263,10 +268,14 @@ def _run_degraded(keys: np.ndarray, q: np.ndarray,
         assert svc.health()["degraded"], "health must report degraded"
         ns = svc.throughput(q, backends=("jnp",),
                             repeats=REPEATS["numpy"])["jnp"]
+        # tail latency of the degraded path itself: measured while the
+        # fault is still armed, so every call rides the open-breaker chain
+        p50, p99 = _latency_percentiles(svc, q, "jnp")
     finally:
         FAULTS.clear(POINT_BACKEND_DISPATCH)
     return {
-        "ns_per_lookup": ns, "build_s": svc.build_s,
+        "ns_per_lookup": ns, "p50_ns": p50, "p99_ns": p99,
+        "build_s": svc.build_s,
         "size_bytes": svc.size_bytes, "fallback_backend": "numpy",
     }
 
@@ -376,6 +385,7 @@ def run(out_rows: list[str] | None = None) -> list[str]:
         hit_rate = svc.stats.cache_hit_rate
         ns = svc.throughput(qz, backends=("jnp",),
                             repeats=REPEATS["jnp"])["jnp"]
+        p50, p99 = _latency_percentiles(svc, qz, "jnp")
         rows.append(f"serve,{dname},{keys.size},{ZIPF_EPS},jnp,zipf,"
                     f"{ns:.1f},{svc.build_s:.3f},{svc.size_bytes},"
                     f"{hit_rate:.3f},,,,,,")
@@ -383,6 +393,8 @@ def run(out_rows: list[str] | None = None) -> list[str]:
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "zipf",
             "ns_per_lookup": round(float(ns), 1),
+            "p50_ns": round(float(p50), 1),
+            "p99_ns": round(float(p99), 1),
             "build_s": round(float(svc.build_s), 4),
             "size_bytes": int(svc.size_bytes),
             "cache_hit_rate": round(float(hit_rate), 4),
@@ -397,6 +409,8 @@ def run(out_rows: list[str] | None = None) -> list[str]:
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "update_mix",
             "ns_per_lookup": round(float(um["ns_per_lookup"]), 1),
+            "p50_ns": round(float(um["p50_ns"]), 1),
+            "p99_ns": round(float(um["p99_ns"]), 1),
             "build_s": round(float(um["build_s"]), 4),
             "size_bytes": int(um["size_bytes"]),
             "write_frac": float(um["write_frac"]),
@@ -412,6 +426,8 @@ def run(out_rows: list[str] | None = None) -> list[str]:
                 "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
                 "backend": "jnp", "workload": "mesh_scale",
                 "ns_per_lookup": round(float(ms["ns_per_lookup"]), 1),
+                "p50_ns": round(float(ms["p50_ns"]), 1),
+                "p99_ns": round(float(ms["p99_ns"]), 1),
                 "build_s": round(float(ms["build_s"]), 4),
                 "size_bytes": int(ms["size_bytes"]),
                 "n_devices": int(ms["n_devices"]),
@@ -427,6 +443,8 @@ def run(out_rows: list[str] | None = None) -> list[str]:
             "dataset": dname, "n": int(keys.size), "eps": int(ZIPF_EPS),
             "backend": "jnp", "workload": "degraded",
             "ns_per_lookup": round(float(dg["ns_per_lookup"]), 1),
+            "p50_ns": round(float(dg["p50_ns"]), 1),
+            "p99_ns": round(float(dg["p99_ns"]), 1),
             "build_s": round(float(dg["build_s"]), 4),
             "size_bytes": int(dg["size_bytes"]),
             "fallback_backend": dg["fallback_backend"],

@@ -21,10 +21,23 @@ verifies at every step that degraded serving stays *exact* (equal to
 so every run leaves an inspectable record of breaker states, error
 journals, and recovery decisions.
 
+The drill also runs with the production observability posture armed
+(ISSUE 10): the flight recorder samples spans and series throughout, and
+an :class:`~repro.obs.IncidentManager` is installed on ``--incident-dir``.
+At the end the drill *asserts* the incident contract — every drilled
+failure class (breaker open, merge build fault, manifest commit fault,
+corruption/LKG quarantine) produced **exactly one** debounced bundle,
+phase 3's duplicate ``merge.failure`` trigger was debounced rather than
+double-bundled, and every bundle's ``health.json`` / ``metrics.json`` /
+``spans.jsonl`` round-trips through ``json.loads``. The chaos CI job
+uploads the ``incidents/`` tree as an artifact next to the health log.
+
     PYTHONPATH=src python examples/chaos_drill.py [--n 200000] \
-        [--dir /tmp/plex-chaos] [--health-out chaos-health.json]
+        [--dir /tmp/plex-chaos] [--health-out chaos-health.json] \
+        [--incident-dir incidents]
 """
 import argparse
+import collections
 import json
 import pathlib
 import shutil
@@ -32,11 +45,21 @@ import shutil
 import numpy as np
 
 from repro.data import generate
+from repro.obs import RECORDER
+from repro.obs import incident as incidents
 from repro.persist import gen_name
 from repro.resilience import (FAULTS, POINT_BACKEND_DISPATCH,
                               POINT_MANIFEST_COMMIT, POINT_MERGE_BUILD,
                               always, fail_once)
 from repro.serving import PlexService
+
+# one bundle per drilled failure class — the incident-layer acceptance bar
+EXPECTED_BUNDLES = {
+    "breaker.open": 1,             # phase 1: jnp outage opens the breaker
+    "merge.failure": 1,            # phase 2 (phase 3's repeat is debounced)
+    "manifest.commit_failed": 1,   # phase 3: atomic commit aborted
+    "generation.quarantine": 1,    # phase 4: corrupt snapshot quarantined
+}
 
 
 def check_exact(svc, model, rng, label):
@@ -56,18 +79,29 @@ def main():
                     choices=["amzn", "face", "osm", "wiki"])
     ap.add_argument("--dir", default="/tmp/plex-chaos")
     ap.add_argument("--health-out", default="chaos-health.json")
+    ap.add_argument("--incident-dir", default="incidents")
     args = ap.parse_args()
 
     root = pathlib.Path(args.dir)
     shutil.rmtree(root, ignore_errors=True)
+    idir = pathlib.Path(args.incident_dir)
+    shutil.rmtree(idir, ignore_errors=True)
     rng = np.random.default_rng(0)
     keys = generate(args.dataset, args.n)
     phases: dict[str, dict] = {}
+
+    # production observability posture: flight recorder armed for the
+    # whole drill, incident manager catching every failure class. The
+    # debounce window spans the drill on purpose — phase 3's merge
+    # failure must collapse into phase 2's bundle, not duplicate it.
+    RECORDER.arm(interval_s=0.2)
+    mgr = incidents.install(idir, debounce_s=300.0, retention=16)
 
     # merge_threshold=0: merges are explicit, so each phase controls
     # exactly when the build/commit under test runs
     svc = PlexService(keys.copy(), eps=args.eps, breaker_threshold=2,
                       keep_generations=2, merge_threshold=0)
+    mgr.bind_health(svc.health)
     svc.save(root, fsync=False)
     model = svc.logical_keys().copy()
 
@@ -113,12 +147,38 @@ def main():
     print("phase 4: newest generation corrupted on disk")
     (root / gen_name(gen_now) / "snapshot.plex").write_bytes(b"garbage")
     svc = PlexService.open(root, fsync=False)
+    mgr.bind_health(svc.health)    # the old instance's health is stale
     print(f"  recovered at generation {svc.generation} "
           f"(quarantined {gen_name(gen_now)}); "
           f"{svc.n_pending} WAL entries replayed")
     check_exact(svc, np.asarray(svc.logical_keys()), rng, "recovered")
     phases["lkg_recovery"] = svc.health()
     svc.close()
+
+    # ---- incident-bundle contract --------------------------------------
+    RECORDER.disarm()
+    incidents.uninstall()
+    bundles = mgr.bundles()
+    kinds = collections.Counter(
+        json.loads((b / "incident.json").read_text())["kind"]
+        for b in bundles)
+    assert dict(kinds) == EXPECTED_BUNDLES, (
+        f"bundle classes diverged: got {dict(kinds)}, "
+        f"want {EXPECTED_BUNDLES}")
+    assert mgr.debounced.get("merge.failure", 0) >= 1, (
+        "phase 3's merge failure should have been debounced into "
+        "phase 2's bundle")
+    for b in bundles:
+        json.loads((b / "health.json").read_text())
+        m = json.loads((b / "metrics.json").read_text())
+        assert "registry" in m and "recorder" in m
+        for line in (b / "spans.jsonl").read_text().splitlines():
+            if line:
+                json.loads(line)
+        assert (b / "metrics.prom").exists()
+    print(f"incident bundles OK: "
+          f"{', '.join(b.name for b in bundles)} under {idir}/ "
+          f"(debounced: {dict(mgr.debounced)})")
 
     out = pathlib.Path(args.health_out)
     out.write_text(json.dumps(phases, indent=1))

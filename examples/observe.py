@@ -23,7 +23,13 @@ job relies on:
    ``health()["metrics"]``,
 5. the disabled-hook overhead stays under 2% of an un-instrumented
    uniform lookup (measured hook cost x hook sites per call against the
-   measured obs-off ns/lookup).
+   measured obs-off ns/lookup),
+6. the *armed flight recorder* (ISSUE 10's always-on posture: metrics +
+   1-in-8 span sampling + the background series sampler) keeps uniform
+   serve within ``RECORDER_OVERHEAD_BUDGET`` of the obs-off baseline,
+   and one sampler tick costs under ``TICK_DUTY_BUDGET`` of its wake
+   interval — the bound that makes "leave it on in production" a
+   measured claim instead of a hope.
 
     PYTHONPATH=src python examples/observe.py [--n 200000] \
         [--jsonl-out obs-events.jsonl] [--prom-out obs-metrics.prom] \
@@ -38,7 +44,7 @@ import time
 import numpy as np
 
 from repro.data import generate
-from repro.obs import (METRICS, TRACE, disable_observability,
+from repro.obs import (METRICS, RECORDER, TRACE, disable_observability,
                        enable_observability)
 from repro.obs.export import write_jsonl, write_prometheus
 from repro.serving import PlexService
@@ -49,6 +55,12 @@ from repro.serving import PlexService
 # in lookup_planes — generously rounded up
 HOOKS_PER_LOOKUP = 8
 OVERHEAD_BUDGET = 0.02
+# always-on posture: armed sampled serve vs obs-off (best-of-repeats on a
+# shared runner is noisy, so the bound carries slack above the measured
+# ~1-3% cost), and a sampler tick as a fraction of its wake interval
+SPAN_SAMPLE = 8
+RECORDER_OVERHEAD_BUDGET = 0.10
+TICK_DUTY_BUDGET = 0.10
 
 
 def measure_disabled_hook_ns(iters: int = 200_000) -> float:
@@ -100,6 +112,33 @@ def main():
     assert frac < OVERHEAD_BUDGET, (
         f"disabled-observability overhead {frac:.4%} exceeds "
         f"{OVERHEAD_BUDGET:.0%} of uniform serve")
+
+    # -- always-on flight recorder (assertion 6) -----------------------------
+    # same service, same query stream: arm the production posture (metrics
+    # + 1-in-N span sampling + the background sampler thread) and re-measure
+    RECORDER.arm(interval_s=0.25, span_sample=SPAN_SAMPLE)
+    try:
+        ns_rec = svc.throughput(q, backends=("jnp",), repeats=3)["jnp"]
+        RECORDER.tick()              # one measured sampler pass
+        tick_frac = RECORDER.last_tick_s / RECORDER.interval_s
+    finally:
+        RECORDER.disarm()
+    ratio = ns_rec / ns_off
+    print(f"recorder-armed uniform serve: {ns_rec:.1f} ns/lookup "
+          f"({ratio:.3f}x of obs-off, sample_n={SPAN_SAMPLE}); "
+          f"sampler tick {RECORDER.last_tick_s * 1e3:.2f} ms "
+          f"({tick_frac * 100:.2f}% of its {RECORDER.interval_s:.2f}s "
+          f"interval)")
+    assert ratio < 1.0 + RECORDER_OVERHEAD_BUDGET, (
+        f"armed flight recorder costs {(ratio - 1) * 100:.1f}% of uniform "
+        f"serve, budget {RECORDER_OVERHEAD_BUDGET:.0%}")
+    assert tick_frac < TICK_DUTY_BUDGET, (
+        f"sampler tick duty cycle {tick_frac:.2%} exceeds "
+        f"{TICK_DUTY_BUDGET:.0%} of the wake interval")
+    RECORDER.clear()
+    METRICS.reset()
+    TRACE.clear()
+
     svc.save(root)
     svc.close()
 

@@ -37,6 +37,9 @@ import dataclasses
 
 import numpy as np
 
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACE
+
 
 @dataclasses.dataclass(frozen=True)
 class PlacementPlan:
@@ -257,6 +260,17 @@ def _plan_from_arrays(offsets: np.ndarray, n_keys_total: int,
                         for d in range(n_devices)])
     active = np.flatnonzero(np.diff(bounds) > 0).astype(np.int64)
     bound_keys = np.asarray(shard_min, np.uint64)[bounds[active]]
+    bottleneck = float(dev_w.max()) if dev_w.size else 0.0
+    if METRICS.enabled:
+        METRICS.counter("placement.plans").inc()
+        METRICS.gauge("placement.n_active").set(float(active.size))
+        METRICS.gauge("placement.bottleneck_weight").set(bottleneck)
+    if TRACE.enabled:
+        # one marker per (re)plan: device-loss re-plans and hotness-driven
+        # rebalances both show up in the flight recorder's span ring
+        TRACE.event("placement.plan", n_devices=n_devices,
+                    n_shards=int(weights.size), n_active=int(active.size),
+                    bottleneck_weight=bottleneck)
     return PlacementPlan(n_devices=n_devices, shard_start=bounds,
                          key_start=key_start, active=active,
                          bound_keys=bound_keys, weights=dev_w)

@@ -86,10 +86,18 @@ def _hook_dispatch(impl: Any, name: str, method: str) -> None:
 
     @functools.wraps(orig)
     def instrumented(*args, **kw):
-        fire(POINT_BACKEND_DISPATCH, backend=name)
-        if METRICS.enabled:
-            METRICS.counter(f"serve.dispatch.{name}").inc()
-        return orig(*args, **kw)
+        try:
+            fire(POINT_BACKEND_DISPATCH, backend=name)
+            if METRICS.enabled:
+                METRICS.counter(f"serve.dispatch.{name}").inc()
+            return orig(*args, **kw)
+        except Exception:
+            # per-backend dispatch error counter (injected trips included):
+            # the SLO watchdog's error-rate input and the first number an
+            # incident bundle answers "which backend was failing?" with
+            if METRICS.enabled:
+                METRICS.counter(f"serve.dispatch_errors.{name}").inc()
+            raise
 
     try:
         setattr(impl, method, instrumented)

@@ -503,7 +503,7 @@ class StackedJnpPlex:
         delta buffer into the same dispatch (merged lookup); ``n_valid``
         marks the real (unpadded) lane count for cache accounting."""
         dp = delta if delta is not None and delta.n_entries else None
-        if METRICS.enabled:
+        if METRICS.enabled and METRICS.counted_dispatch:
             # counted dispatch: same pipeline + the telemetry counter
             # plane, bypassing the hot-key cache on purpose — the live
             # hotness estimate must see every query through the full
@@ -511,6 +511,8 @@ class StackedJnpPlex:
             # would bias the estimate precisely where it matters), and
             # probe-travel is only meaningful on actually-probed lanes.
             # Results are bit-identical either way (the cache contract).
+            # The armed flight recorder clears ``counted_dispatch`` so the
+            # always-on posture serves through the plain kernels below.
             nv = np.int32(self.block if n_valid is None else n_valid)
             if self._counters is None:
                 self._counters = self._fresh_counters()

@@ -21,15 +21,31 @@ serving pipeline instead of behind a build flag.
 Exporters live in ``obs.export`` (Prometheus text format, JSONL event
 log); the serving layer surfaces the same data in
 ``PlexService.health()["metrics"]``.
+
+On top of the singletons sits the production layer (PR 10):
+
+* ``RECORDER`` (``obs.recorder.FlightRecorder``) — the always-on mode:
+  1-in-N span sampling plus a background sampler thread snapshotting
+  registry series into bounded time rings.
+* ``obs.slo`` — declarative SLO specs evaluated with multi-window burn
+  rates, surfaced as ``health()["slo"]`` and ``slo.breach`` events.
+* ``obs.incident`` — debounced, retention-capped on-disk incident
+  bundles written automatically on breaker opens, chain exhaustion,
+  merge failures, queue sheds, quarantines, and SLO breaches.
 """
 from __future__ import annotations
 
+from .incident import IncidentManager
 from .metrics import METRICS, MetricsRegistry
+from .recorder import RECORDER, FlightRecorder
+from .slo import SLOSpec, SLOWatchdog, default_slos, watch_service
 from .trace import TRACE, Tracer
 
-__all__ = ["METRICS", "TRACE", "MetricsRegistry", "Tracer",
-           "enable_observability", "disable_observability",
-           "observability_enabled"]
+__all__ = ["METRICS", "RECORDER", "TRACE", "FlightRecorder",
+           "IncidentManager", "MetricsRegistry", "SLOSpec", "SLOWatchdog",
+           "Tracer", "default_slos", "disable_observability",
+           "enable_observability", "observability_enabled",
+           "watch_service"]
 
 
 def enable_observability() -> None:

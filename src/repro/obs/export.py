@@ -3,10 +3,16 @@
 ``prometheus_text`` renders the registry in the Prometheus exposition
 format (text/plain version 0.0.4): counters as ``<name>_total``, gauges
 plainly, histograms as cumulative ``_bucket{le=...}`` series plus
-``_sum``/``_count`` and exact recent-window quantile gauges, and counter
-vectors as one labelled series per slot (``{shard="i"}``). Metric names
-are sanitised (dots become underscores) and prefixed, so
-``serve.lookup_us`` scrapes as ``plex_serve_lookup_us``.
+``_sum``/``_count``, exact recent-window quantiles as a *separate*
+``<name>_recent`` gauge family (``{quantile="0.5"}`` etc. — a sample
+under the histogram family name itself is invalid exposition and real
+scrapers reject the whole page), and counter vectors as one labelled
+series per slot (``{shard="i"}``). Metric names are sanitised (dots
+become underscores) and prefixed, so ``serve.lookup_us`` scrapes as
+``plex_serve_lookup_us``. Iteration goes through the registry's locked
+``collect()`` snapshot, so a scrape concurrent with instrument
+registration (the background merge worker's first cycle) can't hit a
+dict-mutated-during-iteration error.
 
 ``write_jsonl`` appends one ``{"type": "metrics", ...}`` summary line
 after the trace's ``{"type": "span", ...}`` lines, so a single file
@@ -37,16 +43,16 @@ def prometheus_text(registry: MetricsRegistry = METRICS, *,
                     prefix: str = DEFAULT_PREFIX) -> str:
     """The registry in Prometheus exposition text format."""
     lines: list[str] = []
-    snap_counters = sorted(registry._counters.items())
-    for name, c in snap_counters:
+    fams = registry.collect()
+    for name, c in fams["counters"]:
         m = f"{prefix}_{_san(name)}_total"
         lines.append(f"# TYPE {m} counter")
         lines.append(f"{m} {c.snapshot()}")
-    for name, g in sorted(registry._gauges.items()):
+    for name, g in fams["gauges"]:
         m = f"{prefix}_{_san(name)}"
         lines.append(f"# TYPE {m} gauge")
         lines.append(f"{m} {g.snapshot()}")
-    for name, h in sorted(registry._histograms.items()):
+    for name, h in fams["histograms"]:
         m = f"{prefix}_{_san(name)}"
         lines.append(f"# TYPE {m} histogram")
         for le, count in h.bucket_counts():
@@ -54,10 +60,13 @@ def prometheus_text(registry: MetricsRegistry = METRICS, *,
             lines.append(f'{m}_bucket{{le="{le_s}"}} {count}')
         lines.append(f"{m}_sum {h.sum:g}")
         lines.append(f"{m}_count {h.count}")
-        # exact recent-window quantiles (summary-style convenience series)
+        # exact recent-window quantiles: a distinct gauge family — only
+        # _bucket/_sum/_count samples may live under a histogram TYPE
+        qm = f"{m}_recent"
+        lines.append(f"# TYPE {qm} gauge")
         for q in (0.5, 0.9, 0.99):
-            lines.append(f'{m}{{quantile="{q:g}"}} {h.percentile(q):g}')
-    for name, v in sorted(registry._vectors.items()):
+            lines.append(f'{qm}{{quantile="{q:g}"}} {h.percentile(q):g}')
+    for name, v in fams["vectors"]:
         m = f"{prefix}_{_san(name)}_total"
         lines.append(f"# TYPE {m} counter")
         for i, val in enumerate(v.snapshot()):

@@ -180,6 +180,15 @@ class MetricsRegistry:
 
     def __init__(self):
         self.enabled = False
+        # full-fidelity dial: when set (the default), enabling the registry
+        # also routes stacked serving through the counted-dispatch kernels
+        # (device counter planes -> exact live hotness / probe histograms),
+        # which costs real device work per block. The flight recorder
+        # clears it while armed: the always-on posture keeps counters,
+        # latency histograms, and sampled spans, but serves through the
+        # plain kernels — exact hotness stays an opt-in drill
+        # (``enable_observability``), not a standing tax.
+        self.counted_dispatch = True
         self._lock = threading.Lock()
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
@@ -237,18 +246,34 @@ class MetricsRegistry:
             self._histograms.clear()
             self._vectors.clear()
 
+    def collect(self) -> dict[str, list]:
+        """Locked, point-in-time item lists of every instrument family —
+        THE public iteration API for exporters and the flight recorder.
+
+        Instruments register concurrently (the background merge worker's
+        first ``merge.cycles`` inc, a late backend's dispatch counter), so
+        walking the family dicts live can raise ``RuntimeError: dictionary
+        changed size during iteration`` mid-scrape. The snapshot here is
+        taken under the creation lock; the returned lists are the caller's
+        to iterate at leisure (instrument *values* stay live — reading
+        them is the same best-effort contract as every other read)."""
+        with self._lock:
+            return {
+                "counters": sorted(self._counters.items()),
+                "gauges": sorted(self._gauges.items()),
+                "histograms": sorted(self._histograms.items()),
+                "vectors": sorted(self._vectors.items()),
+            }
+
     def snapshot(self) -> dict:
         """One JSON-serialisable view of every instrument — the payload of
         ``health()["metrics"]["registry"]`` and the JSONL export."""
+        fams = self.collect()
         return {
-            "counters": {n: c.snapshot()
-                         for n, c in sorted(self._counters.items())},
-            "gauges": {n: g.snapshot()
-                       for n, g in sorted(self._gauges.items())},
-            "histograms": {n: h.snapshot()
-                           for n, h in sorted(self._histograms.items())},
-            "vectors": {n: v.snapshot()
-                        for n, v in sorted(self._vectors.items())},
+            "counters": {n: c.snapshot() for n, c in fams["counters"]},
+            "gauges": {n: g.snapshot() for n, g in fams["gauges"]},
+            "histograms": {n: h.snapshot() for n, h in fams["histograms"]},
+            "vectors": {n: v.snapshot() for n, v in fams["vectors"]},
         }
 
 

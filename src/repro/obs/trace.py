@@ -18,6 +18,13 @@ read and a predictable branch, never an allocation. Enabled, events append
 to a bounded deque (thread-safe by CPython contract), so a long soak
 keeps the newest ``maxlen`` events instead of growing without bound.
 
+``sample_n`` is the always-on production dial (the flight recorder sets
+it when armed): with ``sample_n = N > 1``, ``span`` and ``record`` keep
+every Nth call per thread and the rest cost one thread-local counter
+bump — no ``_Span`` allocation, no deque append. ``event`` is never
+sampled: events mark rare state transitions (breaker opens, SLO
+breaches) that an incident bundle must not miss.
+
 The span taxonomy threaded through the repo (see README "Observability"):
 
     serve.lookup / serve.submit / serve.queue_wait / serve.staging /
@@ -84,8 +91,15 @@ class _Span:
     def __exit__(self, *exc):
         dur = time.perf_counter() - self._t0
         stack = self._tr._stack()
-        if stack and stack[-1] is self:
-            stack.pop()
+        # Truncate back to this span's frame rather than popping only an
+        # exact top-of-stack match: a mismatched or exception-crossed exit
+        # (inner span leaked by a generator, exits out of order) must not
+        # leave stale frames inflating every later span's depth. Identity
+        # scan from the top — the common case is still one comparison.
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i:]
+                break
         self._tr._emit(self.name, self._t0, dur, self._depth, self.attrs)
         return False                # exceptions propagate; the span records
 
@@ -95,6 +109,7 @@ class Tracer:
 
     def __init__(self, maxlen: int = DEFAULT_MAXLEN):
         self.enabled = False
+        self.sample_n = 1          # keep 1-in-N spans/records per thread
         self._events: collections.deque = collections.deque(maxlen=maxlen)
         self._tls = threading.local()
         # perf_counter -> wall-clock offset, so exported timestamps are
@@ -113,15 +128,25 @@ class Tracer:
             st = self._tls.stack = []
         return st
 
+    def _sampled(self) -> bool:
+        """Per-thread 1-in-``sample_n`` admission (True when unsampled)."""
+        n = self.sample_n
+        if n <= 1:
+            return True
+        c = getattr(self._tls, "ctr", 0) + 1
+        self._tls.ctr = c
+        return c % n == 0
+
     def span(self, name: str, **attrs):
-        """Timed context manager; the shared null context when disabled."""
-        if not self.enabled:
+        """Timed context manager; the shared null context when disabled
+        (and for the skipped fraction under ``sample_n`` sampling)."""
+        if not self.enabled or not self._sampled():
             return _NULL
         return _Span(self, name, attrs)
 
     def record(self, name: str, dur_s: float, **attrs) -> None:
         """Post-hoc span that ended now with a known duration."""
-        if not self.enabled:
+        if not self.enabled or not self._sampled():
             return
         t1 = time.perf_counter()
         self._emit(name, t1 - dur_s, dur_s, len(self._stack()), attrs)

@@ -25,6 +25,7 @@ import threading
 import time
 from typing import Callable
 
+from ..obs.incident import report as _report_incident
 from ..obs.metrics import METRICS
 from ..obs.trace import TRACE
 
@@ -102,6 +103,14 @@ class CircuitBreaker:
                         frm=frm, to=to)
         if METRICS.enabled:
             METRICS.counter(f"breaker.{self.name}.to_{to}").inc()
+        if to == OPEN:
+            _report_incident(
+                "breaker.open",
+                f"breaker {self.name!r} opened ({frm} -> open) after "
+                f"{self.failures} lifetime failure(s)",
+                breaker=self.name, frm=frm,
+                last_error=repr(self.last_error)
+                if self.last_error is not None else None)
 
     def record_success(self) -> None:
         with self._lock:

@@ -195,6 +195,16 @@ class FaultRegistry:
         with self._lock:
             return {p: len(s) for p, s in self._points.items() if s}
 
+    def snapshot(self) -> dict:
+        """Armed points + lifetime trip counts in one locked view — the
+        ``armed_faults`` payload of an incident bundle (a post-mortem
+        must show whether a drill, not production, caused the failure)."""
+        with self._lock:
+            return {
+                "active": {p: len(s) for p, s in self._points.items() if s},
+                "trips": dict(self._trips),
+            }
+
     def fire(self, point: str, **ctx) -> None:
         """Production-side hook: raise iff an armed scenario trips.
 

@@ -151,6 +151,7 @@ from ..distrib.placement import (PlacementPlan, live_hotness, plan_matches,
                                  plan_placement)
 from ..distrib.routed_lookup import RoutedStackedLookup
 from ..kernels.jnp_lookup import N_PROBE_BUCKETS, PROBE_MODES
+from ..obs.incident import report as _report_incident
 from ..obs.metrics import METRICS
 from ..obs.trace import TRACE
 from ..kernels.pairs import split_u64
@@ -524,6 +525,14 @@ class PlexService:
         self._consec_merge_failures = 0
         self._merge_retry_at = 0.0
         self._closed = False
+        # monotonic timestamp of the moment the delta first crossed the
+        # merge threshold without merging (None = no backlog): the age of
+        # the oldest over-threshold unmerged write, health's
+        # "merge_backlog_s" and the SLO watchdog's backlog objective
+        self._backlog_since: float | None = None
+        # optional obs.slo.SLOWatchdog; attach_slo() wires it and health()
+        # grows a schema-additive "slo" section while attached
+        self._slo = None
 
         # background-merge machinery. _merge_mutex serialises merges with
         # each other (NOT with mutations: the lock order is _merge_mutex ->
@@ -694,6 +703,9 @@ class PlexService:
                 # identical routing math); with no survivors left, serve
                 # the legacy single-device path instead
                 self._note_error(e)
+                _report_incident("device.loss", str(e),
+                                 device_index=int(e.device_index),
+                                 survivors=len(devices) - 1)
                 if len(devices) <= 1:
                     log.warning("router: %s; no surviving device to "
                                 "re-plan onto, falling back to the legacy "
@@ -944,7 +956,9 @@ class PlexService:
                     for n, b in sorted(self._breakers.items())}
         retry_in = max(0.0, self._merge_retry_at - time.monotonic()) \
             if self._consec_merge_failures else 0.0
-        return {
+        backlog = 0.0 if self._backlog_since is None \
+            else time.monotonic() - self._backlog_since
+        out = {
             "generation": self.generation,
             "epoch": int(state.snapshot.epoch),
             "n_keys": int(state.snapshot.n_keys + state.delta.net_keys),
@@ -963,6 +977,10 @@ class PlexService:
             "fallback_lookups": int(self.stats.fallback_lookups),
             "merge_failures": int(self.stats.merge_failures),
             "merge_retry_in_s": round(retry_in, 3),
+            # age of the oldest over-threshold unmerged delta (0 = none):
+            # the write path's SLO input — a growing value means merges
+            # are not keeping up with (or failing behind) the update rate
+            "merge_backlog_s": round(backlog, 3),
             "merge_mode": self.merge_mode,
             "merge_worker_alive": self._merge_worker is not None
             and self._merge_worker.is_alive(),
@@ -983,6 +1001,21 @@ class PlexService:
                 "registry": METRICS.snapshot(),
             },
         }
+        slo = self._slo
+        if slo is not None:
+            # schema-additive, present only while a watchdog is attached
+            out["slo"] = slo.status()
+        return out
+
+    def attach_slo(self, watchdog):
+        """Attach an ``obs.slo.SLOWatchdog`` (or ``None`` to detach):
+        while attached, ``health()`` carries a schema-additive ``"slo"``
+        section with each objective's state and burn rates. The service
+        never drives the watchdog itself — a flight-recorder probe (see
+        ``obs.slo.watch_service``) or any caller loop feeds it
+        ``observe(health())`` samples. Returns the watchdog."""
+        self._slo = watchdog
+        return watchdog
 
     def live_hotness(self) -> np.ndarray:
         """Per-shard routed-query counts for the current epoch, accumulated
@@ -1104,7 +1137,12 @@ class PlexService:
             if b != backend:
                 self.stats.fallback_lookups += 1
             return out
-        raise BackendUnavailableError(chain, last_err) from last_err
+        err = BackendUnavailableError(chain, last_err)
+        _report_incident("backend.unavailable", str(err),
+                         health=self.health, chain=list(chain),
+                         last_error=repr(last_err)
+                         if last_err is not None else None)
+        raise err from last_err
 
     def _lookup_backend(self, state: _ServiceState, q: np.ndarray,
                         backend: str) -> np.ndarray:
@@ -1127,12 +1165,12 @@ class PlexService:
         snap = state.snapshot
         if snap.n_shards == 1:
             out = self._lookup_shard(snap.shards[0], q, backend, 0)
-            if METRICS.enabled:
+            if METRICS.enabled and METRICS.counted_dispatch:
                 self._fold_hotness(np.asarray([q.size], np.int64),
                                    np.zeros(N_PROBE_BUCKETS, np.int64), 1)
         else:
             sid = snap.route(q)
-            if METRICS.enabled:
+            if METRICS.enabled and METRICS.counted_dispatch:
                 # host path: routed counts from the binning we already did
                 # (no device probe histogram on this path)
                 self._fold_hotness(
@@ -1231,6 +1269,10 @@ class PlexService:
         # independent snapshot ranks (the delta folds in after resolution)
         if not 0 < self.merge_threshold <= state.delta.n_entries:
             return
+        if self._backlog_since is None:
+            # the delta just crossed the threshold: the backlog clock runs
+            # until a successful publish clears it (health/SLO input)
+            self._backlog_since = time.monotonic()
         if self._consec_merge_failures and \
                 time.monotonic() < self._merge_retry_at:
             return    # backing off: the delta keeps serving merged reads
@@ -1380,6 +1422,7 @@ class PlexService:
                 self._swap_durable(new_dur)
             self._consec_merge_failures = 0
             self._merge_retry_at = 0.0
+            self._backlog_since = None   # the over-threshold delta merged
             self.stats.merges += 1
             self.stats.merge_s += time.perf_counter() - t0
             self.stats.new_epoch(snap.epoch)
@@ -1392,10 +1435,13 @@ class PlexService:
             METRICS.counter("merge.cycles").inc()
         return True
 
-    def _arm_merge_backoff(self, e: BaseException) -> MergeFailedError:
+    def _arm_merge_backoff(self, e: BaseException, *,
+                           kind: str = "merge.failure") -> MergeFailedError:
         """Account one contained merge failure and arm the capped
         exponential retry backoff; returns the ``MergeFailedError`` to
-        raise (callers ``raise self._arm_merge_backoff(e) from e``)."""
+        raise (callers ``raise self._arm_merge_backoff(e) from e``).
+        ``kind`` names the incident class (worker death reports its own
+        so a dead worker and a failed cycle bundle separately)."""
         self.stats.merge_failures += 1
         self._consec_merge_failures += 1
         backoff = min(self.merge_backoff_cap_s,
@@ -1406,6 +1452,9 @@ class PlexService:
         log.warning("merge failed (attempt %d, retry in %.3fs): "
                     "%r; live state untouched",
                     self._consec_merge_failures, backoff, e)
+        _report_incident(kind, repr(e), health=self.health,
+                         consecutive=self._consec_merge_failures,
+                         retry_in_s=round(backoff, 3))
         return MergeFailedError(
             f"merge failed ({self._consec_merge_failures} "
             f"consecutive attempt(s)): {e!r}; the live state is "
@@ -1456,7 +1505,7 @@ class PlexService:
                     except MergeFailedError:
                         pass      # contained; backoff armed, retry later
             except BaseException as e:  # noqa: BLE001 - worker death path
-                self._arm_merge_backoff(e)
+                self._arm_merge_backoff(e, kind="merge.worker_death")
                 log.warning("merge worker died: %r; live state untouched, "
                             "a fresh worker starts on the next update", e)
                 return
@@ -1620,6 +1669,9 @@ class PlexService:
                             "(%r); quarantining and falling back", root,
                             gen_name(g), e)
                 _quarantine(root, gdir, root / wal_name(g))
+                _report_incident("generation.quarantine",
+                                 f"{gen_name(g)}: {e!r}", root=str(root),
+                                 generation=int(g))
         if snap is None:
             raise NoServableGenerationError(root, last_err)
         svc = cls(None, backend=backend, _snapshot=snap, **kw)
@@ -1742,6 +1794,8 @@ class PlexService:
                     "the bound")
                 self.stats.shed_queries += q.size
                 self._note_error(err)
+                _report_incident("queue.shed", str(err), health=self.health,
+                                 shed=int(q.size), overflow=self.overflow)
                 if self.overflow == "reject":
                     raise err
                 ticket._error = err        # shed: the ticket carries it

@@ -143,17 +143,20 @@ def test_bench_lookup_json_schema(tmp_path, monkeypatch, rng):
     assert len(records) == len(BACKENDS) + 4 + n_mesh
     base = {"dataset", "n", "eps", "backend", "workload", "ns_per_lookup",
             "build_s", "size_bytes"}
-    extra = {"uniform": {"p50_ns", "p99_ns"},
-             "zipf": {"cache_hit_rate"},
-             "update_mix": {"write_frac", "merges"},
-             "degraded": {"fallback_backend"},
+    # per-key latency percentiles ride every workload measured through
+    # the service hot path (cold_vs_warm times load, not steady serving)
+    pcts = {"p50_ns", "p99_ns"}
+    extra = {"uniform": pcts,
+             "zipf": {"cache_hit_rate"} | pcts,
+             "update_mix": {"write_frac", "merges"} | pcts,
+             "degraded": {"fallback_backend"} | pcts,
              "cold_vs_warm": {"load_s", "first_batch_s", "warm_speedup"},
-             "mesh_scale": {"n_devices", "n_active"}}
+             "mesh_scale": {"n_devices", "n_active"} | pcts}
     for rec in records:
         assert set(rec) == base | extra.get(rec["workload"], set())
         assert rec["ns_per_lookup"] > 0
     for rec in records:
-        if rec["workload"] == "uniform":
+        if pcts <= set(rec):
             assert 0 < rec["p50_ns"] <= rec["p99_ns"]
     zipf = [r for r in records if r["workload"] == "zipf"]
     assert len(zipf) == 1 and 0.0 <= zipf[0]["cache_hit_rate"] <= 1.0

@@ -1,5 +1,6 @@
-"""End-to-end observability (ISSUE 9): metrics registry, pipeline
-tracing, and the live shard-hotness export.
+"""End-to-end observability (ISSUES 9 + 10): metrics registry, pipeline
+tracing, the live shard-hotness export, and the production layer — the
+always-on flight recorder, SLO watchdog, and automatic incident bundles.
 
 The contract under test:
 
@@ -13,7 +14,17 @@ The contract under test:
   spans cover every pipeline stage;
 * ``health()`` grows a schema-additive ``metrics`` section that stays
   JSON-serialisable through chaos, and the per-epoch stats counters
-  survive the background merge worker's epoch rollover race-free.
+  survive the background merge worker's epoch rollover race-free;
+* the tracer survives the always-on posture: mismatched or
+  exception-crossed span exits never corrupt the per-thread depth,
+  cross-thread record/event interleaving is safe at the deque, and a
+  long soak holds the bounded-memory contract;
+* exporters iterate a locked registry snapshot (scrape-during-register
+  never raises) and emit *valid* Prometheus exposition (one TYPE per
+  family, cumulative ``le`` buckets ending at ``+Inf``);
+* the recorder/SLO/incident layer: bounded series rings, multi-window
+  burn-rate breaches with events, and debounced retention-capped
+  bundles written from every wired failure class.
 """
 from __future__ import annotations
 
@@ -26,8 +37,11 @@ import pytest
 
 from repro.obs import (METRICS, TRACE, disable_observability,
                        enable_observability, observability_enabled)
+from repro.obs import incident as incident_mod
 from repro.obs.export import prometheus_text, write_jsonl
 from repro.obs.metrics import RING_SIZE, Histogram, MetricsRegistry
+from repro.obs.recorder import RECORDER, FlightRecorder
+from repro.obs.slo import SLOSpec, SLOWatchdog, default_slos
 from repro.obs.trace import Tracer, _NULL
 from repro.serving.plex_service import PlexService, ServiceStats
 
@@ -39,10 +53,17 @@ def _clean_obs():
     disable_observability()
     METRICS.reset()
     TRACE.clear()
+    TRACE.sample_n = 1
+    incident_mod.uninstall()
     yield
+    if RECORDER.armed:
+        RECORDER.disarm()
+    RECORDER.clear()
+    incident_mod.uninstall()
     disable_observability()
     METRICS.reset()
     TRACE.clear()
+    TRACE.sample_n = 1
 
 
 def _keys(n: int = 50_000, seed: int = 5) -> np.ndarray:
@@ -135,6 +156,112 @@ def test_prometheus_text_format():
     assert "# TYPE plex_serve_lookup_us histogram" in text
     assert 'plex_serve_lookup_us_bucket{le="+Inf"} 1' in text
     assert "plex_serve_lookup_us_count 1" in text
+    # recent-window quantiles live in their own gauge family: a bare
+    # {quantile=...} sample under the histogram name is invalid exposition
+    assert "# TYPE plex_serve_lookup_us_recent gauge" in text
+    assert 'plex_serve_lookup_us_recent{quantile="0.5"} 5' in text
+    assert 'plex_serve_lookup_us{quantile' not in text
+
+
+def _parse_prometheus(text: str) -> dict[str, dict]:
+    """Minimal exposition parser: family -> {type, samples: [(name,
+    labels, value)]}. Raises on malformed lines or samples that belong
+    to no declared family."""
+    fams: dict[str, dict] = {}
+    hist_suffixes = ("_bucket", "_sum", "_count")
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, fam, typ = line.split(" ")
+            assert fam not in fams, f"duplicate TYPE for {fam}"
+            fams[fam] = {"type": typ, "samples": []}
+            continue
+        assert not line.startswith("#"), f"unexpected comment: {line}"
+        metric, value = line.rsplit(" ", 1)
+        labels = ""
+        if "{" in metric:
+            metric, _, rest = metric.partition("{")
+            labels = rest.rstrip("}")
+        owner = None
+        if metric in fams:
+            owner = metric
+            if fams[metric]["type"] == "histogram":
+                # a bare sample under a histogram family is invalid
+                raise AssertionError(f"bare sample under histogram "
+                                     f"family: {line}")
+        else:
+            for suf in hist_suffixes:
+                base = metric[:-len(suf)] if metric.endswith(suf) else None
+                if base in fams and fams[base]["type"] == "histogram":
+                    owner = base
+                    break
+        assert owner is not None, f"sample outside any TYPE family: {line}"
+        fams[owner]["samples"].append((metric, labels, float(value)))
+    return fams
+
+
+def test_prometheus_format_validity():
+    """Whole-page validity: unique TYPE per family, every sample owned by
+    a declared family, histogram buckets cumulative and ending at +Inf
+    == _count."""
+    r = MetricsRegistry()
+    r.counter("serve.dispatch.jnp").inc(4)
+    r.gauge("queue.depth").set(7)
+    for v in (3.0, 30.0, 300.0, 3e6):
+        r.histogram("serve.lookup_us").observe(v)
+    r.vector("serve.shard.routed", 3).add(np.asarray([1, 2, 3]))
+    fams = _parse_prometheus(prometheus_text(r))
+    h = fams["plex_serve_lookup_us"]
+    assert h["type"] == "histogram"
+    buckets = [(lab, v) for m, lab, v in h["samples"]
+               if m.endswith("_bucket")]
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts), "le buckets must be cumulative"
+    assert buckets[-1][0] == 'le="+Inf"'
+    count = [v for m, _, v in h["samples"] if m.endswith("_count")][0]
+    assert buckets[-1][1] == count == 4
+    assert fams["plex_serve_lookup_us_recent"]["type"] == "gauge"
+    assert fams["plex_serve_dispatch_jnp_total"]["type"] == "counter"
+    assert len(fams["plex_serve_shard_routed_total"]["samples"]) == 3
+
+
+def test_scrape_during_registration_race():
+    """Satellite: exporters and ``snapshot()`` iterate via the locked
+    ``collect()`` — hammer concurrent instrument *registration* against
+    scrapes and snapshots; no RuntimeError, every page parses."""
+    r = MetricsRegistry()
+    stop = threading.Event()
+    errors: list[BaseException] = []
+
+    def registrar(tid: int):
+        i = 0
+        while not stop.is_set():
+            r.counter(f"c.{tid}.{i}").inc()
+            r.gauge(f"g.{tid}.{i}").set(i)
+            r.histogram(f"h.{tid}.{i}").observe(float(i + 1))
+            r.vector(f"v.{tid}.{i}", 2).add_at(0)
+            i += 1
+
+    def scraper():
+        while not stop.is_set():
+            try:
+                _parse_prometheus(prometheus_text(r))
+                json.dumps(r.snapshot())
+            except BaseException as e:   # pragma: no cover - the bug
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=registrar, args=(t,))
+               for t in range(2)] + \
+        [threading.Thread(target=scraper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.4)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
 
 
 def test_write_jsonl_spans_then_metrics(tmp_path):
@@ -347,9 +474,9 @@ def test_health_schema_pinned_and_json():
             "fallback_chain", "breakers", "degraded", "queue_depth",
             "queue_limit", "inflight_batches", "shed_queries",
             "backend_failures", "fallback_lookups", "merge_failures",
-            "merge_retry_in_s", "merge_mode", "merge_worker_alive",
-            "journal_ops", "wal_bytes", "last_errors", "armed_faults",
-            "closed", "metrics",
+            "merge_retry_in_s", "merge_backlog_s", "merge_mode",
+            "merge_worker_alive", "journal_ops", "wal_bytes",
+            "last_errors", "armed_faults", "closed", "metrics",
         }
         assert set(h["metrics"]) == {
             "enabled", "shard_hotness", "probe_trips", "cache_hits",
@@ -424,7 +551,10 @@ def test_stats_epoch_rollover_race_free():
 def test_background_merge_with_obs_stress():
     """Writer inserts past the threshold while readers serve with obs
     armed: final lookups stay exact, health stays JSON-serialisable, and
-    the per-epoch live hotness matches the current shard count."""
+    the per-epoch live hotness matches the current shard count. A scraper
+    thread exports Prometheus text throughout — the merge worker
+    registers instruments (``merge.cycles``) concurrently, the exact
+    race the locked ``collect()`` snapshot closes."""
     keys = _keys(40_000)
     svc = PlexService(keys.copy(), 32, n_shards=2, backend="numpy",
                       merge_mode="background", merge_threshold=256)
@@ -450,7 +580,17 @@ def test_background_merge_with_obs_stress():
                     errors.append(e)
                     return
 
-        readers = [threading.Thread(target=reader) for _ in range(2)]
+        def scraper():
+            while not stop.is_set():
+                try:
+                    prometheus_text()
+                    json.dumps(METRICS.snapshot())
+                except Exception as e:       # pragma: no cover
+                    errors.append(e)
+                    return
+
+        readers = [threading.Thread(target=reader) for _ in range(2)] + \
+            [threading.Thread(target=scraper)]
         for t in readers:
             t.start()
         for _ in range(4):
@@ -500,3 +640,459 @@ def test_bench_diff_ignores_unknown_fields():
     assert _key(base) == _key(extended)
     # a record missing even identity fields keys without raising
     _key({"ns_per_lookup": 1.0})
+
+
+# -- tracer robustness under the always-on mode ------------------------------
+
+def test_span_mismatched_exit_restores_depth():
+    """Out-of-order exits (outer before inner) must truncate the stale
+    frames, not leak them into every later span's depth."""
+    tr = Tracer()
+    tr.enable()
+    a = tr.span("a")
+    b = tr.span("b")
+    a.__enter__()
+    b.__enter__()
+    a.__exit__(None, None, None)     # exits while b is still on the stack
+    b.__exit__(None, None, None)     # stale frame: must not corrupt depth
+    with tr.span("after") as s:
+        assert s._depth == 0
+    assert tr._stack() == []
+
+
+def test_span_exception_crossed_exit_restores_depth():
+    """A generator-held span abandoned by an exception must not inflate
+    depth once the enclosing span exits."""
+    tr = Tracer()
+    tr.enable()
+
+    def gen():
+        with tr.span("leaky"):
+            yield 1
+            yield 2                  # never reached: span never exits
+
+    with pytest.raises(RuntimeError):
+        with tr.span("outer"):
+            g = gen()
+            next(g)
+            del g                    # leaky's frame is now stale
+            raise RuntimeError("boom")
+    # outer's truncating exit swept the abandoned inner frame with it
+    with tr.span("after") as s:
+        assert s._depth == 0
+    assert tr._stack() == []
+
+
+def test_trace_cross_thread_interleave_and_soak():
+    """record()/event() from sampler/worker-style threads interleave
+    safely at the deque, and a long soak holds the bounded-memory
+    contract (newest maxlen events kept)."""
+    tr = Tracer(maxlen=1024)
+    tr.enable()
+    errors: list[BaseException] = []
+
+    def hammer(tid: int):
+        try:
+            for i in range(5000):
+                tr.record(f"t{tid}.r", 1e-6, i=i)
+                tr.event(f"t{tid}.e", i=i)
+                with tr.span(f"t{tid}.s"):
+                    pass
+        except BaseException as e:   # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    evs = tr.events()
+    assert len(evs) == 1024          # soak: bounded, newest kept
+    for line in tr.to_jsonl().splitlines():
+        json.loads(line)
+    # per-thread depths never bled across threads
+    assert all(e["depth"] == 0 for e in evs)
+
+
+def test_span_sampling_keeps_one_in_n():
+    tr = Tracer()
+    tr.enable()
+    tr.sample_n = 4
+    for _ in range(100):
+        with tr.span("s"):
+            pass
+    for _ in range(100):
+        tr.record("r", 1e-6)
+    for _ in range(10):
+        tr.event("e")                # events are never sampled
+    names = [e["name"] for e in tr.events()]
+    assert names.count("s") == 25
+    assert names.count("r") == 25
+    assert names.count("e") == 10
+    tr.sample_n = 1
+    tr.clear()
+    with tr.span("t"):
+        pass
+    assert len(tr.events()) == 1     # back to full fidelity
+
+
+# -- flight recorder ---------------------------------------------------------
+
+def test_recorder_arm_disarm_and_series():
+    rec = FlightRecorder(interval_s=3600.0)   # thread effectively idle
+    rec.arm(span_sample=8)
+    try:
+        assert METRICS.enabled and TRACE.enabled and TRACE.sample_n == 8
+        # sampled posture: no counted-dispatch kernels while armed
+        assert not METRICS.counted_dispatch
+        METRICS.counter("serve.lookups").inc(5)
+        METRICS.gauge("queue.depth").set(3.0)
+        h = METRICS.histogram("serve.lookup_ns_per_key")
+        for v in (100.0, 200.0, 900.0):
+            h.observe(v)
+        rec.tick(now=1.0)
+        METRICS.counter("serve.lookups").inc(2)
+        rec.tick(now=2.0)
+        assert rec.series("counter.serve.lookups") == [(1.0, 5.0),
+                                                       (2.0, 7.0)]
+        assert rec.series("gauge.queue.depth")[-1] == (2.0, 3.0)
+        assert rec.series("hist.serve.lookup_ns_per_key.count")[-1][1] == 3
+        snap = rec.snapshot()
+        json.loads(json.dumps(snap))            # bundle payload round-trips
+        assert snap["ticks"] == 2 and snap["span_sample"] == 8
+    finally:
+        rec.disarm()
+    assert not METRICS.enabled and not TRACE.enabled
+    assert TRACE.sample_n == 1 and METRICS.counted_dispatch
+    assert not rec.armed
+
+
+def test_recorder_sampler_thread_runs_and_stops():
+    rec = FlightRecorder(interval_s=0.01)
+    rec.arm()
+    try:
+        deadline = time.monotonic() + 5.0
+        while rec.ticks == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert rec.ticks > 0
+        assert rec.armed
+    finally:
+        rec.disarm()
+    assert not rec.armed
+    n = rec.ticks
+    time.sleep(0.05)
+    assert rec.ticks == n            # really stopped
+
+
+def test_recorder_bounded_memory_and_probe_containment():
+    rec = FlightRecorder(interval_s=3600.0, series_maxlen=8, max_series=4)
+    calls = [0]
+    rec.add_probe(lambda: calls.__setitem__(0, calls[0] + 1))
+
+    def bad_probe():
+        raise RuntimeError("probe boom")
+
+    rec.add_probe(bad_probe)
+    rec.arm()
+    try:
+        for i in range(20):
+            METRICS.counter("a").inc()
+            METRICS.counter("b").inc()
+            METRICS.gauge("c").set(i)
+            METRICS.gauge("d").set(i)
+            METRICS.gauge(f"overflow.{i}").set(i)   # past max_series
+            rec.tick(now=float(i))
+        assert len(rec.series("counter.a")) == 8    # ring bounded
+        assert len(rec.series_names()) == 4         # series cap held
+        assert rec.snapshot()["dropped_series"] > 0
+        assert calls[0] == 20                       # good probe ran each tick
+        rec.remove_probe(bad_probe)                 # and never killed a tick
+    finally:
+        rec.disarm()
+
+
+# -- SLO watchdog ------------------------------------------------------------
+
+def _clocked_watchdog(specs):
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    return SLOWatchdog(specs, clock=clock), t
+
+
+def test_slo_level_breach_event_and_recovery():
+    spec = SLOSpec("p99", ("metrics", "p99"), bound=100.0,
+                   windows=(10.0, 40.0), budget=0.5)
+    wd, t = _clocked_watchdog([spec])
+    enable_observability()
+    # healthy samples fill both windows
+    for i in range(4):
+        t[0] = float(i)
+        st = wd.observe({"metrics": {"p99": 50.0}})
+    assert st["p99"]["state"] == "ok"
+    # sustained violation: the short window saturates fast, the long
+    # window's burn crosses 1.0 (budget 0.5) once half its samples are bad
+    for i in range(4, 10):
+        t[0] = float(i)
+        st = wd.observe({"metrics": {"p99": 500.0}})
+    assert st["p99"]["state"] == "breach"
+    assert st["p99"]["burn"]["10s"] >= 1.0
+    assert wd.breaches["p99"] == 1
+    breach_evs = [e for e in TRACE.events() if e["name"] == "slo.breach"]
+    assert len(breach_evs) == 1 and breach_evs[0]["attrs"]["slo"] == "p99"
+    # recovery: good samples age the bad ones out of the short window
+    for i in range(10, 22):
+        t[0] = float(i)
+        st = wd.observe({"metrics": {"p99": 50.0}})
+    assert st["p99"]["state"] == "ok"
+    assert wd.breaches["p99"] == 1   # no double-count on recovery
+    json.dumps(st)
+
+
+def test_slo_rate_kind_counter_delta():
+    spec = SLOSpec("shed", ("shed_queries",), bound=10.0, kind="rate",
+                   windows=(5.0, 5.0), budget=0.5)
+    wd, t = _clocked_watchdog([spec])
+    total = 0
+    for i in range(6):
+        t[0] = float(i)
+        total += 2                   # 2 sheds/s: under the 10/s bound
+        st = wd.observe({"shed_queries": total})
+    assert st["shed"]["state"] == "ok"
+    assert st["shed"]["value"] == pytest.approx(2.0)
+    for i in range(6, 12):
+        t[0] = float(i)
+        total += 100                 # 100/s: way over
+        st = wd.observe({"shed_queries": total})
+    assert st["shed"]["state"] == "breach"
+    # a counter reset (service restart) clamps to 0, never negative
+    t[0] = 12.0
+    st = wd.observe({"shed_queries": 0})
+    assert st["shed"]["value"] == 0.0
+
+
+def test_slo_missing_field_and_breach_incident(tmp_path):
+    wd, t = _clocked_watchdog([
+        SLOSpec("x", ("absent", "path"), bound=1.0, windows=(1.0, 1.0))])
+    st = wd.observe({"something": 1})     # absent path: no sample, no crash
+    assert "value" not in st["x"] and st["x"]["state"] == "ok"
+    # a breach writes an slo.<name> incident bundle when one is installed
+    incident_mod.install(tmp_path / "inc")
+    spec = SLOSpec("err", ("errs",), bound=1.0, windows=(5.0, 5.0),
+                   budget=0.9)
+    wd, t = _clocked_watchdog([spec])
+    for i in range(5):
+        t[0] = float(i)
+        wd.observe({"errs": 100.0})
+    bundles = incident_mod.manager().bundles()
+    assert len(bundles) == 1 and bundles[0].name.endswith("slo-err")
+
+
+def test_default_slos_cover_issue_objectives():
+    names = {s.name for s in default_slos()}
+    assert names == {"lookup_p99_ns", "fallback_rate", "error_rate",
+                     "shed_rate", "merge_backlog_s", "wal_bytes"}
+    with pytest.raises(ValueError, match="mode"):
+        SLOSpec("bad", ("x",), 1.0, mode="avg")
+    with pytest.raises(ValueError, match="budget"):
+        SLOSpec("bad", ("x",), 1.0, budget=0.0)
+
+
+def test_attach_slo_health_section_and_observe():
+    keys = _keys(20_000)
+    svc = PlexService(keys, 32, n_shards=2)
+    try:
+        enable_observability()
+        # generous latency bound: the first lookup pays JIT compilation,
+        # and a one-sample breach would make this test machine-dependent
+        wd = svc.attach_slo(SLOWatchdog(default_slos(lookup_p99_ns=1e12)))
+        svc.lookup(keys[:svc.block].copy())
+        st = wd.observe(svc.health())
+        h = svc.health()
+        assert set(h["slo"]) == set(st)
+        assert all(v["state"] == "ok" for v in h["slo"].values())
+        json.dumps(h)
+        svc.attach_slo(None)
+        assert "slo" not in svc.health()     # schema-additive: detachable
+    finally:
+        svc.close()
+
+
+def test_merge_backlog_age_tracks_unmerged_threshold():
+    from repro.resilience.faults import FAULTS, POINT_MERGE_BUILD, fail_once
+    keys = _keys(20_000)
+    svc = PlexService(keys.copy(), 32, n_shards=2, merge_threshold=64,
+                      merge_backoff_s=0.0)
+    try:
+        assert svc.health()["merge_backlog_s"] == 0.0
+        with FAULTS.injected(POINT_MERGE_BUILD, fail_once()):
+            # crosses the threshold; the auto-merge trips and is contained,
+            # so the delta stays over-threshold and the backlog clock runs
+            svc.insert(np.unique(np.arange(2**40, 2**40 + 128,
+                                           dtype=np.uint64)))
+        time.sleep(0.01)
+        assert svc.health()["merge_backlog_s"] > 0.0
+        assert svc.merge()           # fault cleared: explicit merge lands
+        assert svc.health()["merge_backlog_s"] == 0.0
+    finally:
+        svc.close()
+
+
+# -- incident bundles --------------------------------------------------------
+
+def _read_bundle(bundle):
+    out = {"incident": json.loads((bundle / "incident.json").read_text()),
+           "health": json.loads((bundle / "health.json").read_text()),
+           "metrics": json.loads((bundle / "metrics.json").read_text())}
+    for line in (bundle / "spans.jsonl").read_text().splitlines():
+        if line:
+            json.loads(line)
+    assert (bundle / "metrics.prom").exists()
+    return out
+
+
+def test_incident_bundle_contents_debounce_retention(tmp_path):
+    t = [0.0]
+    mgr = incident_mod.IncidentManager(
+        tmp_path / "inc", debounce_s=10.0, retention=3,
+        health_source=lambda: {"generation": 7, "degraded": True},
+        clock=lambda: t[0])
+    enable_observability()
+    METRICS.counter("serve.lookups").inc(9)
+    with TRACE.span("serve.lookup", n=4):
+        pass
+    b = mgr.trigger("breaker.open", "jnp breaker opened",
+                    context={"breaker": "jnp"})
+    assert b is not None and b.name == "0001-breaker-open"
+    got = _read_bundle(b)
+    assert got["incident"]["kind"] == "breaker.open"
+    assert got["incident"]["context"]["breaker"] == "jnp"
+    assert got["incident"]["generation"] == 7    # headline from health
+    assert got["health"]["degraded"] is True
+    assert got["metrics"]["registry"]["counters"]["serve.lookups"] == 9
+    assert "armed_faults" in got["incident"]
+    # debounce: same kind within the window is suppressed and counted
+    t[0] = 5.0
+    assert mgr.trigger("breaker.open", "again") is None
+    assert mgr.debounced["breaker.open"] == 1
+    # a different kind is fresh
+    assert mgr.trigger("queue.shed", "overflow") is not None
+    # past the window the kind fires again; retention keeps newest 3
+    for i in range(3):
+        t[0] = 20.0 + 20.0 * i
+        assert mgr.trigger("breaker.open", f"flap {i}") is not None
+    names = [p.name for p in mgr.bundles()]
+    assert len(names) == 3
+    assert names[-1].endswith("breaker-open")
+    assert mgr.written == 5
+
+
+def test_incident_seq_continues_across_install(tmp_path):
+    root = tmp_path / "inc"
+    incident_mod.install(root).trigger("queue.shed", "x")
+    incident_mod.uninstall()
+    mgr = incident_mod.install(root)      # fresh manager, same directory
+    b = mgr.trigger("queue.shed", "y")
+    assert b.name.startswith("0002-")     # sequence resumed, not reset
+
+
+def test_report_noop_when_uninstalled_and_never_raises(tmp_path):
+    incident_mod.report("breaker.open", "nobody listening")  # no-op
+    mgr = incident_mod.install(tmp_path / "inc")
+
+    def exploding_health():
+        raise RuntimeError("health mid-failure")
+
+    mgr.bind_health(exploding_health)
+    incident_mod.report("merge.failure", "health source broken")
+    got = _read_bundle(mgr.bundles()[0])
+    assert "error" in got["health"]       # captured, not propagated
+
+
+def test_breaker_open_writes_bundle(tmp_path):
+    from repro.resilience.breakers import CircuitBreaker
+    incident_mod.install(tmp_path / "inc")
+    br = CircuitBreaker("jnp", failure_threshold=2, cooldown_s=0.0)
+    br.record_failure(RuntimeError("d1"))
+    assert incident_mod.manager().bundles() == []   # below threshold
+    br.record_failure(RuntimeError("d2"))           # -> open
+    bundles = incident_mod.manager().bundles()
+    assert len(bundles) == 1
+    got = _read_bundle(bundles[0])
+    assert got["incident"]["kind"] == "breaker.open"
+    assert got["incident"]["context"]["breaker"] == "jnp"
+
+
+def test_chain_exhaustion_and_shed_bundles(tmp_path):
+    from repro.resilience import BackendUnavailableError, QueueFullError
+    from repro.resilience.faults import (FAULTS, POINT_BACKEND_DISPATCH,
+                                         always)
+    keys = _keys(20_000)
+    svc = PlexService(keys.copy(), 32, n_shards=2, backend="jnp",
+                      fallback=None, breaker_threshold=100,
+                      max_queue=64, overflow="shed", max_delay_s=60.0)
+    incident_mod.install(tmp_path / "inc", health_source=svc.health)
+    try:
+        with FAULTS.injected(POINT_BACKEND_DISPATCH, always(backend="jnp")):
+            with pytest.raises(BackendUnavailableError):
+                svc.lookup(keys[:100].copy())
+        t1 = svc.submit(keys[:60].copy())     # parked sub-block (60 queued)
+        t2 = svc.submit(keys[:10].copy())     # 70 > 64: shed
+        kinds = [json.loads((b / "incident.json").read_text())["kind"]
+                 for b in incident_mod.manager().bundles()]
+        assert kinds == ["backend.unavailable", "queue.shed"]
+        for b in incident_mod.manager().bundles():
+            got = _read_bundle(b)
+            # health captured through the service source at trigger time
+            assert "generation" in got["health"]
+        svc.drain()
+        np.testing.assert_array_equal(t1.result(),
+                                      np.searchsorted(keys, keys[:60]))
+        with pytest.raises(QueueFullError):
+            t2.result()
+    finally:
+        svc.close()
+
+
+def test_quarantine_and_manifest_bundles(tmp_path):
+    from repro.persist.manifest import (CorruptManifestError, Manifest,
+                                        read_manifest, write_manifest)
+    incident_mod.install(tmp_path / "inc", debounce_s=0.0)
+    # corrupt manifest read
+    root = tmp_path / "dur"
+    root.mkdir()
+    write_manifest(root, Manifest.for_generation(0))
+    (root / "MANIFEST.json").write_text("{ torn")
+    with pytest.raises(CorruptManifestError):
+        read_manifest(root)
+    kinds = [json.loads((b / "incident.json").read_text())["kind"]
+             for b in incident_mod.manager().bundles()]
+    assert kinds == ["manifest.corrupt"]
+    # LKG quarantine during open(): destroy the newest generation's
+    # snapshot so recovery falls back to gen 0 and quarantines gen 1
+    from repro.persist.manifest import gen_name
+    droot = tmp_path / "svc"
+    droot.mkdir()
+    keys = _keys(20_000)
+    svc = PlexService(keys.copy(), 32, n_shards=2,
+                      keep_generations=2, merge_threshold=0)
+    try:
+        svc.save(droot, fsync=False)
+        svc.insert(np.unique(np.arange(2**40, 2**40 + 64,
+                                       dtype=np.uint64)))
+        assert svc.merge() and svc.generation == 1
+    finally:
+        svc.close()
+    (droot / gen_name(1) / "snapshot.plex").write_bytes(b"garbage")
+    svc2 = PlexService.open(droot, fsync=False)
+    try:
+        assert svc2.generation == 0
+        kinds = [json.loads((b / "incident.json").read_text())["kind"]
+                 for b in incident_mod.manager().bundles()]
+        assert "generation.quarantine" in kinds
+    finally:
+        svc2.close()
